@@ -1,0 +1,263 @@
+"""Benchmark driver — one benchmark per paper table/figure.
+
+  table1   FedMoCo vs FedMoCo-LW resources (paper Table 1)
+  table2   per-stage exchange characteristics (paper Table 2)
+  table3   cost multipliers, all methods (paper Table 3 cost columns)
+  table4   auxiliary-data amount (paper Table 4, reduced-scale FL)
+  fig5     per-round memory / FLOPs / download / upload curves
+  fig6     batch size vs peak memory
+  fig14    rounds-per-stage allocation -> effective rounds per layer
+  kernels  Pallas kernels vs jnp oracle (allclose + timing)
+  roofline dry-run roofline table (reads results/dryrun_*.json)
+
+``python -m benchmarks.run`` runs the fast set; ``--full`` adds the
+reduced-scale FL accuracy benchmarks (table4), which train for real.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np                                        # noqa: E402
+
+from benchmarks import resources                          # noqa: E402
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+SCHEDULES = ("e2e", "layerwise", "lw_fedssl", "progressive", "fll_dd")
+NAMES = {"e2e": "FedMoCo", "layerwise": "FedMoCo-LW",
+         "lw_fedssl": "LW-FedSSL", "progressive": "Prog-FedSSL",
+         "fll_dd": "FLL+DD"}
+# paper Table 3 cost columns (memory, flops, comm) for validation
+PAPER_MULT = {"e2e": (1.00, 1.00, 1.00), "layerwise": (0.25, 0.35, 0.08),
+              "lw_fedssl": (0.30, 0.48, 0.31),
+              "progressive": (1.00, 0.57, 0.54),
+              "fll_dd": (0.62, 0.36, 0.08)}
+
+
+def bench_table1():
+    print("\n== Table 1: FedMoCo (e2e) vs FedMoCo-LW (layer-wise), "
+          "per client ==")
+    rows = {}
+    for s in ("e2e", "layerwise"):
+        rows[s] = resources.schedule_costs(s)
+    print(f"{'':14s} {'Memory(MB)':>12s} {'FLOPs(x1e10)':>14s} "
+          f"{'Comm(MB)':>10s}")
+    for s, r in rows.items():
+        print(f"{NAMES[s]:14s} {r['peak_memory'] / 1e6:12.0f} "
+              f"{r['flops_total'] / 1e10:14.2f} "
+              f"{r['comm_total'] / 1e6:10.0f}")
+    m = rows["e2e"]["peak_memory"] / rows["layerwise"]["peak_memory"]
+    f = rows["e2e"]["flops_total"] / rows["layerwise"]["flops_total"]
+    c = rows["e2e"]["comm_total"] / rows["layerwise"]["comm_total"]
+    print(f"reduction LW vs e2e: memory {m:.1f}x  flops {f:.1f}x  "
+          f"comm {c:.1f}x   (paper Table 1: 4.0x, 2.9x, 12x)")
+    return rows
+
+
+def bench_table2():
+    print("\n== Table 2: characteristics at stage s ==")
+    from repro.configs.base import FLConfig
+    from repro.core import schedule as sched
+    print(f"{'method':12s} {'active':16s} {'frozen':14s} "
+          f"{'download':12s} {'upload':10s} {'calib':6s}")
+    for s in SCHEDULES:
+        plans = sched.build_schedule(FLConfig(rounds=24, schedule=s), 12)
+        p = plans[12]                       # a mid-training round
+
+        def rng_(t):
+            lo, hi = t
+            return f"L{lo + 1}..L{hi}" if hi - lo > 1 else f"L{hi}"
+        active = (f"L{p.active_from + 1}..L{p.sub_layers}"
+                  if p.sub_layers - p.active_from > 1
+                  else f"L{p.sub_layers}")
+        frozen = f"L1..L{p.active_from}" if p.active_from else "-"
+        print(f"{NAMES[s]:12s} {active:16s} {frozen:14s} "
+              f"{rng_(p.download_stages):12s} {rng_(p.upload_stages):10s} "
+              f"{'yes' if p.server_calibrate else 'no':6s}")
+
+
+def bench_table3():
+    print("\n== Table 3 (cost columns): multipliers vs FedMoCo ==")
+    base = resources.schedule_costs("e2e")
+    print(f"{'method':12s} {'Memory':>8s} {'FLOPs':>8s} {'Comm':>8s} "
+          f"{'paper(M,F,C)':>20s}")
+    out = {}
+    for s in SCHEDULES:
+        r = resources.schedule_costs(s)
+        m = r["peak_memory"] / base["peak_memory"]
+        f = r["flops_total"] / base["flops_total"]
+        c = r["comm_total"] / base["comm_total"]
+        pm, pf, pc = PAPER_MULT[s]
+        print(f"{NAMES[s]:12s} {m:8.2f} {f:8.2f} {c:8.2f} "
+              f"{f'{pm:.2f},{pf:.2f},{pc:.2f}':>20s}")
+        out[s] = (m, f, c)
+    return out
+
+
+def bench_fig5():
+    print("\n== Fig. 5: per-round curves (values at stages 1, 6, 12) ==")
+    for s in SCHEDULES:
+        r = resources.schedule_costs(s)
+        ser = r["series"]
+        idx = [0, len(ser["memory"]) // 2, -1]
+        mem = [f"{ser['memory'][i] / 1e6:.0f}" for i in idx]
+        dwn = [f"{ser['download'][i] / 1e6:.2f}" for i in idx]
+        upl = [f"{ser['upload'][i] / 1e6:.2f}" for i in idx]
+        print(f"{NAMES[s]:12s} memMB {mem}  downMB {dwn}  upMB {upl}")
+
+
+def bench_fig6():
+    print("\n== Fig. 6b: peak memory vs batch size ==")
+    print(f"{'batch':>6s}" + "".join(f"{NAMES[s]:>14s}" for s in SCHEDULES))
+    for b in (64, 128, 256, 512, 1024):
+        row = [f"{b:6d}"]
+        for s in SCHEDULES:
+            r = resources.schedule_costs(s, batch=b)
+            row.append(f"{r['peak_memory'] / 1e6:14.0f}")
+        print("".join(row))
+
+
+def bench_fig14():
+    print("\n== Fig. 13/14: rounds-per-stage allocations ==")
+    from repro.core.schedule import stage_rounds
+    for alloc in ("uniform", "right_skewed", "left_skewed"):
+        rs = stage_rounds(180, 12, alloc)
+        # effective rounds layer L trains: layerwise -> its stage's rounds;
+        # progressive -> sum of rounds from its stage onward
+        prog = [sum(rs[i:]) for i in range(12)]
+        print(f"{alloc:14s} per-stage {rs}")
+        print(f"{'':14s} progressive effective {prog}")
+
+
+def bench_kernels():
+    print("\n== Pallas kernels vs oracle (interpret mode, CPU) ==")
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+    rows = []
+    q = jax.random.normal(key, (2, 256, 4, 64))
+    k = jax.random.normal(key, (2, 256, 2, 64))
+    v = jax.random.normal(key, (2, 256, 2, 64))
+    t0 = time.time()
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    t_k = time.time() - t0
+    want = ref.sdpa_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(out - want)))
+    rows.append(("flash_attention", t_k, err))
+    xh = jax.random.normal(key, (2, 256, 4, 64))
+    dt = jax.nn.softplus(jax.random.normal(key, (2, 256, 4)))
+    a = -dt * 0.1
+    Bm = jax.random.normal(key, (2, 256, 64))
+    Cm = jax.random.normal(key, (2, 256, 64))
+    t0 = time.time()
+    out = ops.ssd_scan(xh, dt, a, Bm, Cm, interpret=True)
+    rows.append(("mamba2_ssd_scan", time.time() - t0,
+                 float(jnp.max(jnp.abs(
+                     out - ref.ssd_scan_ref(xh, dt, a, Bm, Cm))))))
+    qq = jax.random.normal(key, (256, 128))
+    kk = jax.random.normal(key, (256, 128))
+    t0 = time.time()
+    got = ops.fused_info_nce(qq, kk, 0.2, interpret=True)
+    from repro.core.losses import info_nce
+    rows.append(("fused_info_nce", time.time() - t0,
+                 abs(float(got) - float(info_nce(qq, kk, 0.2)))))
+    x = jax.random.normal(key, (1024, 256))
+    s = jnp.ones((256,))
+    t0 = time.time()
+    got = ops.fused_rmsnorm(x, s, interpret=True)
+    rows.append(("fused_rmsnorm", time.time() - t0,
+                 float(jnp.max(jnp.abs(got - ref.rmsnorm_ref(x, s))))))
+    for name, dt_, err in rows:
+        print(f"{name:20s} first-call {dt_ * 1e3:8.1f}ms  maxerr {err:.2e}")
+        assert err < 5e-3
+    print("(interpret mode validates semantics; TPU timing is the "
+          "dry-run/roofline's job)")
+
+
+def bench_roofline():
+    print("\n== Roofline table (from dry-run results) ==")
+    found = sorted(RESULTS.glob("dryrun_*.json"))
+    if not found:
+        print("  (no results/dryrun_*.json yet — run "
+              "python -m repro.launch.dryrun --out "
+              "results/dryrun_16x16.json)")
+        return
+    for f in found:
+        rows = json.loads(f.read_text())
+        print(f"-- {f.name}: {len(rows)} rows")
+        for r in rows:
+            print(f"  {r['arch']:28s} {r['shape']:12s} {r['mode']:9s} "
+                  f"comp {r['compute_s'] * 1e3:9.2f}ms "
+                  f"mem {r['memory_s'] * 1e3:9.2f}ms "
+                  f"coll {r['collective_s'] * 1e3:9.2f}ms "
+                  f"-> {r['dominant']:10s} useful "
+                  f"{r['useful_ratio'] * 100:5.1f}%")
+
+
+def bench_table4(rounds=4):
+    print("\n== Table 4: auxiliary data amount (reduced-scale, "
+          "synthetic) ==")
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import (FLConfig, ModelConfig, SSLConfig,
+                                    TrainConfig)
+    from repro.core import ssl as ssl_mod
+    from repro.data import iid_partition, synthetic_images
+    from repro.federated import eval as fl_eval
+    from repro.federated.driver import run_fedssl
+    cfg = ModelConfig("t-vit", "dense", 4, 48, 4, 4, 96, 0, causal=False,
+                      compute_dtype="float32", act="gelu")
+    sslc = SSLConfig(proj_hidden=96, pred_hidden=96, proj_dim=24)
+    tc = TrainConfig(batch_size=32, base_lr=1.5e-4)
+    key = jax.random.PRNGKey(0)
+    imgs, labels = synthetic_images(key, 512, 10, 32)
+    idx = [jnp.asarray(i) for i in iid_partition(512, 2)]
+    enc = ssl_mod.make_vit_encoder(cfg)
+    for frac in (0.05, 0.25, 1.0):
+        aux = imgs[: int(512 * frac)]
+        fl = FLConfig(num_clients=2, rounds=rounds, local_epochs=1,
+                      schedule="lw_fedssl", server_epochs=1)
+        state, hist = run_fedssl(cfg, sslc, fl, tc, images=imgs,
+                                 client_indices=idx, aux_images=aux, key=key)
+        acc = fl_eval.linear_eval(enc, state["online"]["enc"],
+                                  imgs[:256], labels[:256], imgs[256:],
+                                  labels[256:], num_classes=10, epochs=3,
+                                  batch_size=64)
+        print(f"aux fraction {frac:5.2f}: final loss {hist.loss[-1]:.3f} "
+              f"linear acc {acc * 100:.1f}%")
+
+
+BENCHES = {
+    "table1": bench_table1, "table2": bench_table2, "table3": bench_table3,
+    "fig5": bench_fig5, "fig6": bench_fig6, "fig14": bench_fig14,
+    "kernels": bench_kernels, "roofline": bench_roofline,
+}
+FULL_BENCHES = {"table4": bench_table4}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    todo = dict(BENCHES)
+    if args.full:
+        todo.update(FULL_BENCHES)
+    if args.only:
+        todo = {args.only: {**BENCHES, **FULL_BENCHES}[args.only]}
+    t0 = time.time()
+    for name, fn in todo.items():
+        fn()
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

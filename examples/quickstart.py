@@ -1,0 +1,55 @@
+"""Quickstart: LW-FedSSL in ~60 lines.
+
+Trains the paper's system end-to-end at toy scale on CPU:
+10 synthetic-image clients, a reduced ViT encoder, MoCo v3 SSL, the
+layer-wise schedule with server-side calibration + representation
+alignment, then linear evaluation.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig, SSLConfig, TrainConfig, load_arch, reduced
+from repro.core import ssl as ssl_mod
+from repro.data import iid_partition, synthetic_images
+from repro.federated import eval as fl_eval
+from repro.federated.driver import run_fedssl
+
+# 1. model: reduced ViT (the paper uses ViT-Tiny with 12 blocks; we shrink
+#    to 4 blocks so the demo runs in a couple of minutes on CPU)
+cfg = reduced(load_arch("vit-tiny"), num_layers=4, d_model=64,
+              num_heads=4, num_kv_heads=4, d_ff=128)
+ssl_cfg = SSLConfig(method="moco_v3", proj_hidden=128, pred_hidden=128,
+                    proj_dim=32, align_weight=0.01)
+
+# 2. federated setting: 4 clients, 4 rounds = 1 round per layer-wise stage
+fl = FLConfig(num_clients=4, rounds=4, local_epochs=1,
+              schedule="lw_fedssl", server_epochs=1)
+train_cfg = TrainConfig(batch_size=32, base_lr=1.5e-4)
+
+# 3. data: synthetic stand-in for STL-10 (offline container)
+key = jax.random.PRNGKey(0)
+images, labels = synthetic_images(key, 512, num_classes=10)
+client_idx = [jnp.asarray(i) for i in iid_partition(512, fl.num_clients)]
+aux_images = images[:64]          # the server's auxiliary dataset D_g
+
+# 4. run the FL process (Algorithms 1 + 2)
+state, hist = run_fedssl(cfg, ssl_cfg, fl, train_cfg, images=images,
+                         client_indices=client_idx, aux_images=aux_images,
+                         key=key, log=print)
+print(f"\ntotal communication: {hist.total_comm / 1e6:.2f} MB "
+      f"(download grows with stage, upload stays one layer)")
+
+# 5. linear evaluation on the frozen encoder
+encoder = ssl_mod.make_vit_encoder(cfg)
+acc = fl_eval.linear_eval(encoder, state["online"]["enc"],
+                          images[:256], labels[:256],
+                          images[256:], labels[256:],
+                          num_classes=10, epochs=5, batch_size=64)
+print(f"linear evaluation accuracy: {acc * 100:.1f}%")

@@ -1,0 +1,19 @@
+"""Batched serving example: prefill + decode across architecture families.
+
+Serves reduced variants of a dense (GQA), an SSM (Mamba2 hybrid) and an
+MLA+MoE architecture, demonstrating the shared serving path (KV caches,
+ring buffers, recurrent states, latent caches) the decode dry-run shapes
+lower at full scale.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import serve
+
+for arch in ("internlm2-1.8b", "zamba2-2.7b", "deepseek-v2-236b",
+             "seamless-m4t-medium"):
+    serve(arch, batch=2, prompt_len=16, gen=8)

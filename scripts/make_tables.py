@@ -1,0 +1,52 @@
+"""Format results/dryrun_*.json into the EXPERIMENTS.md roofline tables."""
+import json
+import pathlib
+import sys
+
+RES = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+ORDER = ["zamba2-2.7b", "internlm2-1.8b", "xlstm-125m", "internvl2-1b",
+         "seamless-m4t-medium", "mistral-large-123b",
+         "llama4-maverick-400b-a17b", "internlm2-20b", "starcoder2-15b",
+         "deepseek-v2-236b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def table(path, title):
+    rows = {(r["arch"], r["shape"]): r
+            for r in json.loads(path.read_text())}
+    out = [f"### {title}", "",
+           "| arch | shape | compute | memory | collective | dominant | "
+           "useful | peak HBM/dev |",
+           "|---|---|---:|---:|---:|---|---:|---:|"]
+    for a in ORDER:
+        for s in SHAPES:
+            r = rows.get((a, s))
+            if not r:
+                out.append(f"| {a} | {s} | - | - | - | MISSING | - | - |")
+                continue
+            note = " *" if r.get("method") == "depth-extrapolated" else ""
+            peak = max(r["mem_per_device"]["peak_bytes"],
+                       r["mem_per_device"]["argument_bytes"])
+            out.append(
+                f"| {a} | {s} | {r['compute_s']*1e3:.1f} ms | "
+                f"{r['memory_s']*1e3:.0f} ms | "
+                f"{r['collective_s']*1e3:.0f} ms | {r['dominant']}{note} | "
+                f"{min(r['useful_ratio'], 9.99)*100:.0f}% | "
+                f"{peak/2**30:.2f} GiB |")
+    out.append("")
+    out.append("(* = depth-extrapolated, see §Dry-run methodology)")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    for name, title in ((
+            "dryrun_16x16.json",
+            "Single-pod 16x16 (roofline terms, per device)"), (
+            "dryrun_2x16x16.json",
+            "Multi-pod 2x16x16 (coherence pass — rolled scans, "
+            "cost terms not roofline-grade)")):
+        p = RES / name
+        if p.exists():
+            print(table(p, title))
+            print()

@@ -1,0 +1,98 @@
+"""§Perf A/B harness: lower one (arch, shape, mode) with named knob
+settings and print the roofline deltas.
+
+Usage:
+  PYTHONPATH=src python scripts/perf_iter.py --arch internlm2-1.8b \
+      --shape train_4k --knob xent_gold=take --knob xent_gold=mask
+Each --knob value is lowered in sequence; results print side by side and
+append to results/perf_iters.json.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "3")
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import pathlib           # noqa: E402
+import sys               # noqa: E402
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def apply_knob(knob: str):
+    """knob 'name=value' -> mutate the corresponding global."""
+    name, value = knob.split("=", 1)
+    if name == "xent_gold":
+        from repro.models import lm
+        lm.XENT_GOLD_MODE = value
+    elif name == "act_dtype":
+        from repro.models import lm
+        lm.ACT_DTYPE = value
+    elif name == "loss_chunk":
+        from repro.models import lm
+        lm.LOSS_CHUNK = int(value)
+    elif name == "kv_repl":              # wk/wv output replication on/off
+        from repro.sharding import rules
+        if value == "on":
+            rules.PARAM_RULES["wk"] = ("fsdp", None)
+            rules.PARAM_RULES["wv"] = ("fsdp", None)
+        else:
+            rules.PARAM_RULES["wk"] = ("fsdp", "tp")
+            rules.PARAM_RULES["wv"] = ("fsdp", "tp")
+    elif name == "embed_fsdp_only":      # embedding: no vocab TP sharding
+        from repro.sharding import rules
+        if value == "on":
+            rules.PARAM_RULES["embed"] = (None, "fsdp")
+            rules.PARAM_RULES["lm_head"] = ("fsdp", None)
+        else:
+            rules.PARAM_RULES["embed"] = ("tp", "fsdp")
+            rules.PARAM_RULES["lm_head"] = ("fsdp", "tp")
+    elif name == "seq_shard":            # sequence-parallel residual stream
+        from repro.models import lm
+        lm.SEQ_SHARD = value == "on"
+    elif name == "remat_policy":         # None | dots
+        from repro.models import lm
+        lm.REMAT_POLICY = None if value == "none" else value
+    else:
+        raise ValueError(name)
+    return knob
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mode", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--knob", action="append", default=[],
+                    help="name=value; lowered once per knob setting")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun
+    rows = []
+    for knob in (args.knob or ["baseline=none"]):
+        if knob != "baseline=none":
+            apply_knob(knob)
+        row = dryrun.run_one(args.arch, args.shape,
+                             multi_pod=args.multi_pod, mode=args.mode)
+        row["knob"] = knob
+        row["tag"] = args.tag
+        rows.append(row)
+    out = RESULTS / "perf_iters.json"
+    prev = json.loads(out.read_text()) if out.exists() else []
+    out.write_text(json.dumps(prev + rows, indent=1))
+    if len(rows) > 1:
+        b = rows[0]
+        for r in rows[1:]:
+            print(f"\n{r['knob']} vs {b['knob']}:")
+            for k in ("compute_s", "memory_s", "collective_s"):
+                d = (r[k] - b[k]) / max(b[k], 1e-12) * 100
+                print(f"  {k:13s} {b[k]*1e3:10.2f} -> {r[k]*1e3:10.2f} ms "
+                      f"({d:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.npz import load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.fl_state import load_fl_state, save_fl_state  # noqa: F401

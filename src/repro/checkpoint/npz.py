@@ -1,0 +1,44 @@
+"""Pytree <-> .npz checkpointing (flat key paths, lossless dtypes)."""
+from __future__ import annotations
+
+import io
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+SEP = "/"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path, tree):
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    buf = io.BytesIO()
+    np.savez(buf, **_flatten(tree))
+    path.write_bytes(buf.getvalue())
+
+
+def load_pytree(path, like):
+    """Restore into the structure of ``like`` (same treedef/shapes)."""
+    with np.load(pathlib.Path(path), allow_pickle=False) as data:
+        flat = dict(data)
+    paths_like = jax.tree_util.tree_flatten_with_path(like)[0]
+    leaves = []
+    for path, leaf in paths_like:
+        key = SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

@@ -1,0 +1,7 @@
+# The paper's primary contribution: layer-wise federated SSL.
+#   losses    — InfoNCE (Eq. 2), representation alignment (Eq. 3), NT-Xent, BYOL
+#   heads     — MoCo v3 projection/prediction MLP heads
+#   ssl       — MoCo v3 / SimCLR / BYOL engines over an Encoder abstraction
+#   schedule  — e2e / layerwise / lw_fedssl / progressive / fll_dd round plans,
+#               weight transfer, depth dropout
+from repro.core import heads, losses, schedule, ssl  # noqa: F401

@@ -1,0 +1,44 @@
+"""MoCo v3 MLP heads (paper Tables B.7 / B.8).
+
+Projection head H: 3-layer MLP, hidden 4096, out 256, BN + ReLU after
+hidden layers, BN (no affine-relu) on the output layer.
+Prediction head P: 2-layer MLP, hidden 4096, out 256.
+
+BatchNorm uses in-batch statistics inside the jit'd step (sync-BN within a
+client's local batch), matching the MoCo v3 recipe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init import dense_init
+from repro.models.layers.norms import batchnorm, batchnorm_init
+
+
+def _mlp_head_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        layers.append({"w": dense_init(ks[i], (a, b), dtype),
+                       "bn": batchnorm_init(b, dtype)})
+    return {"layers": layers}
+
+
+def proj_init(key, d_in: int, hidden: int, out: int, dtype=jnp.float32):
+    return _mlp_head_init(key, (d_in, hidden, hidden, out), dtype)
+
+
+def pred_init(key, d_in: int, hidden: int, out: int, dtype=jnp.float32):
+    return _mlp_head_init(key, (d_in, hidden, out), dtype)
+
+
+def head_apply(params, x, eps: float = 1e-5):
+    """x: (B, d_in) -> (B, d_out). ReLU on all but the last layer."""
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        x = x.astype(jnp.float32) @ layer["w"].astype(jnp.float32)
+        x = batchnorm(layer["bn"], x, eps)
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,74 @@
+"""Contrastive losses: InfoNCE (paper Eq. 2) and representation alignment
+(paper Eq. 3).
+
+Both operate on (B, d) vectors with in-batch negatives: for row i the
+positive is row i of the other view and rows j != i are negatives. Logits
+and softmax are computed in fp32 for numerical robustness; the B x B logits
+matrix is the SSL compute hot-spot covered by the fused Pallas kernel in
+``repro.kernels.infonce`` (validated against this oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2_normalize(x, eps: float = 1e-12):
+    xf = x.astype(jnp.float32)
+    return xf / jnp.maximum(jnp.linalg.norm(xf, axis=-1, keepdims=True), eps)
+
+
+def info_nce(q, k, tau: float):
+    """InfoNCE with in-batch negatives (Eq. 2).
+
+    q: (B, d) online vectors; k: (B, d) target vectors (stop-gradient is the
+    caller's responsibility). Returns scalar mean loss.
+    """
+    q = l2_normalize(q)
+    k = l2_normalize(k)
+    logits = (q @ k.T) / tau                      # (B, B) fp32
+    labels = jnp.arange(q.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def moco_contrastive(q1, k2, q2, k1, tau: float):
+    """Symmetrized MoCo v3 loss: l(q1,k2) + l(q2,k1)  (Algorithm 2, line 11).
+
+    MoCo v3 scales the loss by 2*tau; we keep the plain sum, which only
+    rescales the effective learning rate.
+    """
+    return info_nce(q1, jax.lax.stop_gradient(k2), tau) + \
+        info_nce(q2, jax.lax.stop_gradient(k1), tau)
+
+
+def align_loss(z1_local, z2_global, z2_local, z1_global, tau: float):
+    """Representation alignment (Eq. 3), symmetrized (Algorithm 2, line 12):
+
+        l(z1_i, z2) + l(z2_i, z1)
+
+    where z*_local come from the local encoder F_i and z*_global from the
+    frozen global encoder F. Negatives are other samples' global reps.
+    """
+    return info_nce(z1_local, jax.lax.stop_gradient(z2_global), tau) + \
+        info_nce(z2_local, jax.lax.stop_gradient(z1_global), tau)
+
+
+def byol_regression(q, k):
+    """BYOL: negative cosine similarity (2 - 2*cos once normalized)."""
+    q = l2_normalize(q)
+    k = l2_normalize(k)
+    return jnp.mean(jnp.sum((q - jax.lax.stop_gradient(k)) ** 2, axis=-1))
+
+
+def simclr_nt_xent(z1, z2, tau: float):
+    """NT-Xent over 2B views: positives are (i, i+B); negatives all others."""
+    B = z1.shape[0]
+    z = l2_normalize(jnp.concatenate([z1, z2], axis=0))    # (2B, d)
+    logits = (z @ z.T) / tau
+    logits = logits - 1e9 * jnp.eye(2 * B)                 # mask self
+    labels = jnp.concatenate([jnp.arange(B) + B, jnp.arange(B)])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,150 @@
+"""Stage schedules for layer-wise / progressive federated training.
+
+Builds a per-round plan for the five training modes of the paper:
+
+  e2e          FedMoCo / FedBYOL / FedSimCLR: full model every round.
+  layerwise    FedMoCo-LW: stage s trains only L_s, exchanges only L_s.
+  lw_fedssl    LW-FedSSL: layerwise + server-side calibration (download is
+               L_1..L_s because the server updates every layer) +
+               representation alignment in the local loss.
+  progressive  Prog-FedSSL: stage s trains and exchanges L_1..L_s.
+  fll_dd       FLL + depth dropout: layerwise, frozen layers dropped with
+               probability ``depth_dropout`` during local training.
+
+Round allocation across stages (paper Section 5.10): ``uniform``,
+``right_skewed`` (more rounds to earlier stages) and ``left_skewed``
+(more rounds to later stages); total is always ``fl.rounds``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class RoundPlan:
+    round_idx: int          # 0-based global communication round
+    stage: int              # 1-based stage s
+    sub_layers: int         # depth of the stage-s sub-model, in stages
+    active_from: int        # stages < active_from are frozen in local training
+    new_stage: bool         # first round of its stage (append layer / transfer)
+    download_stages: Tuple[int, int]   # [lo, hi) stage range client downloads
+    upload_stages: Tuple[int, int]     # [lo, hi) stage range client uploads
+    server_calibrate: bool  # run server-side SSL on D_g after aggregation
+    align: bool             # add representation-alignment loss locally
+    depth_dropout: float    # frozen-layer drop probability (FLL+DD)
+
+
+SCHEDULES = ("e2e", "layerwise", "lw_fedssl", "progressive", "fll_dd")
+
+
+def stage_rounds(total_rounds: int, num_stages: int, allocation: str
+                 ) -> List[int]:
+    """Number of rounds per stage; sums exactly to ``total_rounds``."""
+    S = num_stages
+    if total_rounds < S:
+        raise ValueError(
+            f"need at least one round per stage: rounds={total_rounds} < "
+            f"stages={S}")
+    if allocation == "uniform":
+        w = [1.0] * S
+    elif allocation == "right_skewed":    # more rounds early
+        w = [float(S - s) for s in range(S)]
+    elif allocation == "left_skewed":     # more rounds late
+        w = [float(s + 1) for s in range(S)]
+    else:
+        raise ValueError(allocation)
+    tot = sum(w)
+    out = [max(1, int(total_rounds * x / tot)) for x in w]
+    # fix rounding drift, preserving the skew direction
+    i = 0
+    while sum(out) < total_rounds:
+        out[i % S] += 1
+        i += 1
+    while sum(out) > total_rounds:
+        j = max((s for s in range(S) if out[s] > 1),
+                key=lambda s: out[s])
+        out[j] -= 1
+    return out
+
+
+def build_schedule(fl, num_stages: int) -> List[RoundPlan]:
+    """fl: FLConfig. Returns one RoundPlan per communication round."""
+    mode = fl.schedule
+    if mode not in SCHEDULES:
+        raise ValueError(f"unknown schedule '{mode}'; one of {SCHEDULES}")
+    R, S = fl.rounds, num_stages
+    plans: List[RoundPlan] = []
+    if mode == "e2e":
+        for r in range(R):
+            plans.append(RoundPlan(
+                round_idx=r, stage=S, sub_layers=S, active_from=0,
+                new_stage=False, download_stages=(0, S), upload_stages=(0, S),
+                server_calibrate=False, align=False, depth_dropout=0.0))
+        return plans
+
+    per_stage = (list(fl.rounds_per_stage) if fl.rounds_per_stage
+                 else stage_rounds(R, S, fl.stage_allocation))
+    assert len(per_stage) == S and sum(per_stage) == R, (per_stage, R)
+    r = 0
+    for s in range(1, S + 1):
+        for j in range(per_stage[s - 1]):
+            new = j == 0
+            if mode == "layerwise":
+                plans.append(RoundPlan(r, s, s, s - 1, new,
+                                       (s - 1, s), (s - 1, s),
+                                       False, False, 0.0))
+            elif mode == "fll_dd":
+                plans.append(RoundPlan(r, s, s, s - 1, new,
+                                       (s - 1, s), (s - 1, s),
+                                       False, False, fl.depth_dropout))
+            elif mode == "lw_fedssl":
+                plans.append(RoundPlan(r, s, s, s - 1, new,
+                                       (0, s), (s - 1, s),
+                                       True, True, 0.0))
+            elif mode == "progressive":
+                plans.append(RoundPlan(r, s, s, 0, new,
+                                       (0, s), (0, s),
+                                       False, False, 0.0))
+            r += 1
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# weight transfer (paper Appendix B.2): init L_s from L_{s-1} at stage start
+# ---------------------------------------------------------------------------
+def weight_transfer(stacked_params, stage: int):
+    """Copy block ``stage-2`` into block ``stage-1`` (0-based stack index).
+
+    ``stacked_params`` is any pytree whose leaves are stacked over the stage
+    axis (leading dim). No-op for stage 1.
+    """
+    if stage < 2:
+        return stacked_params
+    src, dst = stage - 2, stage - 1
+    return jax.tree.map(lambda a: a.at[dst].set(a[src]), stacked_params)
+
+
+def transfer_model(params, cfg, stage: int):
+    """Apply weight transfer to a model params dict (uniform/zamba/xlstm)."""
+    params = dict(params)
+    for key in ("blocks", "mlstm", "slstm"):
+        if key in params:
+            params[key] = weight_transfer(params[key], stage)
+    if "enc_blocks" in params:
+        params["enc_blocks"] = weight_transfer(params["enc_blocks"], stage)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# depth dropout (FLL+DD): gates over frozen stages
+# ---------------------------------------------------------------------------
+def depth_dropout_gates(key, num_stages: int, active_from: int, rate: float):
+    """(S,) float gates: active/unbuilt stages always 1, frozen stages kept
+    with prob 1-rate. Gate multiplies the block's residual delta."""
+    keep = (jax.random.uniform(key, (num_stages,)) >= rate).astype(jnp.float32)
+    idx = jnp.arange(num_stages)
+    return jnp.where(idx >= active_from, 1.0, keep)

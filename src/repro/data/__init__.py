@@ -1,0 +1,4 @@
+from repro.data.augment import two_views  # noqa: F401
+from repro.data.partition import dirichlet_partition, iid_partition  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    synthetic_images, synthetic_tokens, client_batches)

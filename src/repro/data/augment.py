@@ -1,0 +1,112 @@
+"""JAX image augmentations for SSL view creation (paper Section 5.1).
+
+The MoCo v3 recipe: random resized crop, color jitter, grayscale,
+horizontal flip, Gaussian blur, solarization — all jit-able, vmapped over
+the batch, so view creation runs inside the client's compiled train step
+(no host-side dataloader, a TPU-adaptation noted in DESIGN.md).
+
+Images are (H, W, 3) float32 in [0, 1].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _bilinear_resize(img, out_h: int, out_w: int):
+    return jax.image.resize(img, (out_h, out_w, img.shape[-1]), "bilinear")
+
+
+def random_resized_crop(key, img, scale=(0.2, 1.0)):
+    H, W, _ = img.shape
+    k1, k2, k3 = jax.random.split(key, 3)
+    area = jax.random.uniform(k1, (), minval=scale[0], maxval=scale[1])
+    side = jnp.sqrt(area)
+    ch = jnp.maximum(1, (side * H).astype(jnp.int32))
+    cw = jnp.maximum(1, (side * W).astype(jnp.int32))
+    y0 = jax.random.randint(k2, (), 0, H) % jnp.maximum(1, H - ch + 1)
+    x0 = jax.random.randint(k3, (), 0, W) % jnp.maximum(1, W - cw + 1)
+    # gather-based crop+resize (dynamic sizes are not jit-able; sample a
+    # coordinate grid instead — equivalent to crop + bilinear resize)
+    ys = y0 + (jnp.arange(H) + 0.5) / H * ch - 0.5
+    xs = x0 + (jnp.arange(W) + 0.5) / W * cw - 0.5
+    y_lo = jnp.clip(jnp.floor(ys).astype(jnp.int32), 0, H - 1)
+    x_lo = jnp.clip(jnp.floor(xs).astype(jnp.int32), 0, W - 1)
+    y_hi = jnp.clip(y_lo + 1, 0, H - 1)
+    x_hi = jnp.clip(x_lo + 1, 0, W - 1)
+    wy = (ys - y_lo)[:, None, None]
+    wx = (xs - x_lo)[None, :, None]
+    g = lambda yy, xx: img[yy][:, xx]        # noqa: E731
+    out = (g(y_lo, x_lo) * (1 - wy) * (1 - wx) + g(y_lo, x_hi) * (1 - wy) * wx
+           + g(y_hi, x_lo) * wy * (1 - wx) + g(y_hi, x_hi) * wy * wx)
+    return out
+
+
+def color_jitter(key, img, strength=0.4):
+    kb, kc, ks_, kh = jax.random.split(key, 4)
+    b = 1.0 + jax.random.uniform(kb, (), minval=-strength, maxval=strength)
+    c = 1.0 + jax.random.uniform(kc, (), minval=-strength, maxval=strength)
+    s = 1.0 + jax.random.uniform(ks_, (), minval=-strength, maxval=strength)
+    img = img * b
+    mean = jnp.mean(img, axis=(0, 1), keepdims=True)
+    img = (img - mean) * c + mean
+    gray = jnp.mean(img, axis=-1, keepdims=True)
+    img = gray + (img - gray) * s
+    # cheap hue-ish channel roll mix
+    h = jax.random.uniform(kh, (), minval=-0.1, maxval=0.1)
+    img = img * (1 - jnp.abs(h)) + jnp.roll(img, 1, axis=-1) * jnp.abs(h)
+    return jnp.clip(img, 0.0, 1.0)
+
+
+def random_grayscale(key, img, p=0.2):
+    gray = jnp.broadcast_to(jnp.mean(img, axis=-1, keepdims=True), img.shape)
+    return jnp.where(jax.random.uniform(key) < p, gray, img)
+
+
+def random_hflip(key, img, p=0.5):
+    return jnp.where(jax.random.uniform(key) < p, img[:, ::-1], img)
+
+
+def gaussian_blur(key, img, p=0.5, sigma_range=(0.1, 2.0), ksize: int = 5):
+    k1, k2 = jax.random.split(key)
+    sigma = jax.random.uniform(k1, (), minval=sigma_range[0],
+                               maxval=sigma_range[1])
+    r = ksize // 2
+    xs = jnp.arange(-r, r + 1, dtype=jnp.float32)
+    w = jnp.exp(-0.5 * (xs / sigma) ** 2)
+    w = w / jnp.sum(w)
+    pad = [(r, r), (0, 0), (0, 0)]
+    v = jnp.pad(img, pad, mode="edge")
+    v = sum(v[i:i + img.shape[0]] * w[i] for i in range(ksize))
+    pad = [(0, 0), (r, r), (0, 0)]
+    hz = jnp.pad(v, pad, mode="edge")
+    hz = sum(hz[:, i:i + img.shape[1]] * w[i] for i in range(ksize))
+    return jnp.where(jax.random.uniform(k2) < p, hz, img)
+
+
+def solarize(key, img, p=0.2, threshold=0.5):
+    sol = jnp.where(img >= threshold, 1.0 - img, img)
+    return jnp.where(jax.random.uniform(key) < p, sol, img)
+
+
+def augment_one(key, img):
+    ks = jax.random.split(key, 6)
+    img = random_resized_crop(ks[0], img)
+    img = color_jitter(ks[1], img)
+    img = random_grayscale(ks[2], img)
+    img = random_hflip(ks[3], img)
+    img = gaussian_blur(ks[4], img)
+    img = solarize(ks[5], img)
+    return img
+
+
+@functools.partial(jax.jit, static_argnames=())
+def two_views(key, images):
+    """images: (B, H, W, 3) -> (x1, x2) augmented views (Algorithm 2 line 6)."""
+    B = images.shape[0]
+    k1, k2 = jax.random.split(key)
+    v1 = jax.vmap(augment_one)(jax.random.split(k1, B), images)
+    v2 = jax.vmap(augment_one)(jax.random.split(k2, B), images)
+    return v1, v2

@@ -1,0 +1,33 @@
+"""FedAvg aggregation (paper Fig. 1, step iv).
+
+``fedavg`` is a jit'd weighted average over a list of client pytrees.
+
+Layer-wise semantics note: clients only ever *change* the active stage's
+blocks and the MLP heads (frozen blocks receive masked zero updates), so
+averaging the full tree is mathematically identical to exchanging only the
+active layer — frozen entries are equal across clients. Communication-cost
+accounting (``repro.federated.comm``) instead follows the per-round plan's
+download/upload stage ranges, exactly like a real deployment would.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fedavg(client_trees, weights):
+    """client_trees: list of pytrees; weights: (N,) fp32 summing to 1."""
+    def avg(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1))
+        return jnp.sum(stacked * w, axis=0).astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *client_trees)
+
+
+def client_weights(sample_counts):
+    w = jnp.asarray(sample_counts, jnp.float32)
+    return w / jnp.sum(w)

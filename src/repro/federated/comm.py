@@ -1,0 +1,58 @@
+"""Communication-cost accounting (paper Figs. 5c/5d, Tables 1-3).
+
+Bytes are derived from the actual parameter pytrees: a stage range selects
+the slice of every stacked block leaf; embedding-side and head parameters
+are added according to the flags. Downloads/uploads per round follow the
+``RoundPlan`` produced by ``repro.core.schedule``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.federated.masks import EMBED_KEYS, STACKED_KEYS, _path_keys
+
+
+def tree_bytes(tree) -> int:
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree.leaves(tree)))
+
+
+def _leaf_bytes(path, a, stage_range, include_embed, include_heads):
+    keys = _path_keys(path)
+    stacked = next((k for k in keys if k in STACKED_KEYS), None)
+    itemsize = a.dtype.itemsize
+    if stacked is not None:
+        lo, hi = stage_range
+        lo, hi = max(0, lo), min(a.shape[0], hi)
+        per = int(np.prod(a.shape[1:])) * itemsize
+        return max(0, hi - lo) * per
+    if any(k in EMBED_KEYS for k in keys):
+        return int(np.prod(a.shape)) * itemsize if include_embed else 0
+    is_head = any(k in ("proj", "pred") for k in keys)
+    if is_head:
+        return int(np.prod(a.shape)) * itemsize if include_heads else 0
+    # final_ln / shared_attn / misc encoder-side leaves travel with the
+    # encoder whenever any stage moves.
+    return int(np.prod(a.shape)) * itemsize if include_embed else 0
+
+
+def partial_bytes(params, stage_range, *, include_embed=True,
+                  include_heads=True) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        total += _leaf_bytes(path, leaf, stage_range, include_embed,
+                             include_heads)
+    return total
+
+
+def round_comm_bytes(params, plan, *, include_heads=True) -> dict:
+    """Bytes for one client in one round under ``plan`` (a RoundPlan)."""
+    down = partial_bytes(params, plan.download_stages,
+                         include_embed=(plan.download_stages[0] == 0),
+                         include_heads=include_heads)
+    up = partial_bytes(params, plan.upload_stages,
+                       include_embed=(plan.upload_stages[0] == 0
+                                      and plan.sub_layers == plan.stage),
+                       include_heads=include_heads)
+    return {"download": down, "upload": up}

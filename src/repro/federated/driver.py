@@ -1,0 +1,127 @@
+"""End-to-end federated SSL driver (paper Algorithms 1 + 2).
+
+Simulates the full FL process on one host: N clients with IID/Dirichlet
+shards, per-round client sampling, local MoCo v3 (or SimCLR/BYOL) training
+with the stage schedule, FedAvg aggregation, server-side calibration and
+communication accounting. This is the reference implementation the
+multi-pod launcher (``repro.launch.train``) distributes: there, the client
+loop becomes a pjit'd program with clients mapped onto the mesh's data
+axis, but the round/stage logic below is shared.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedule as sched
+from repro.core import ssl as ssl_mod
+from repro.federated import aggregate, client as client_mod, comm, server
+from repro.optim import make_optimizer
+from repro.optim.schedules import learning_rate, scaled_base_lr
+
+
+@dataclass
+class FLHistory:
+    loss: List[float] = field(default_factory=list)
+    round_stage: List[int] = field(default_factory=list)
+    download_bytes: List[int] = field(default_factory=list)
+    upload_bytes: List[int] = field(default_factory=list)
+
+    @property
+    def total_comm(self) -> int:
+        return sum(self.download_bytes) + sum(self.upload_bytes)
+
+
+def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
+               aux_images=None, key=None, encoder=None, image_size: int = 32,
+               log=None) -> tuple:
+    """Run the FL process; returns (final_state, FLHistory).
+
+    images: (n, H, W, 3) pooled training pool; client_indices: list of index
+    arrays (one per client); aux_images: D_g for server calibration.
+    """
+    key = key if key is not None else jax.random.PRNGKey(fl.seed)
+    if encoder is None:
+        encoder = ssl_mod.make_vit_encoder(model_cfg, image_size)
+    k_init, key = jax.random.split(key)
+    state = ssl_mod.ssl_init(k_init, encoder, ssl_cfg)
+    opt = make_optimizer(train_cfg)
+    plans = sched.build_schedule(fl, encoder.num_stages)
+    base_lr = scaled_base_lr(train_cfg.base_lr, train_cfg.batch_size)
+    hist = FLHistory()
+    counts = [len(ix) for ix in client_indices]
+
+    step_cache: Dict[tuple, Any] = {}
+
+    def get_step(plan):
+        sig = (plan.sub_layers, plan.active_from, plan.align,
+               plan.depth_dropout)
+        if sig not in step_cache:
+            step_cache[sig] = client_mod.make_local_step(
+                encoder, ssl_cfg, opt, sub_layers=plan.sub_layers,
+                active_from=plan.active_from, align=plan.align,
+                depth_dropout=plan.depth_dropout)
+        return step_cache[sig]
+
+    calib_cache: Dict[int, Any] = {}
+
+    def get_calib(sub_layers):
+        if sub_layers not in calib_cache:
+            calib_cache[sub_layers] = server.make_calibration_step(
+                encoder, ssl_cfg, opt, sub_layers=sub_layers)
+        return calib_cache[sub_layers]
+
+    # stage-relative step counters for the cyclic LR strategy
+    stage_start = {}
+    for p in plans:
+        stage_start.setdefault(p.stage, p.round_idx)
+    stage_lengths = {s: sum(1 for p in plans if p.stage == s)
+                     for s in set(p.stage for p in plans)}
+
+    for plan in plans:
+        if plan.new_stage:
+            state = server.begin_stage(
+                state, plan.stage, weight_transfer=fl.weight_transfer)
+        lr = float(learning_rate(
+            plan.round_idx, fl.rounds, base_lr, train_cfg.lr_schedule,
+            stage_step=plan.round_idx - stage_start[plan.stage],
+            stage_total=stage_lengths[plan.stage],
+            warmup_steps=train_cfg.warmup_steps))
+        key, ks = jax.random.split(key)
+        participants = server.sample_clients(ks, fl.num_clients,
+                                             fl.clients_per_round)
+        global_enc = (jax.tree.map(jnp.copy, state["online"]["enc"])
+                      if plan.align else None)
+        step_fn = get_step(plan)
+        outs, losses = [], []
+        for i in participants:
+            key, kc = jax.random.split(key)
+            online_i, m = client_mod.local_train(
+                state, images[client_indices[i]], step_fn, opt,
+                epochs=fl.local_epochs, batch_size=train_cfg.batch_size,
+                key=kc, lr=lr, global_enc=global_enc)
+            outs.append(online_i)
+            losses.append(float(m["loss"]))
+        w = aggregate.client_weights([counts[i] for i in participants])
+        new_online = aggregate.fedavg(outs, w)
+        state = {**state, "online": new_online}
+        if plan.server_calibrate and aux_images is not None:
+            key, kg = jax.random.split(key)
+            state = server.server_calibrate(
+                state, aux_images, get_calib(plan.sub_layers), opt,
+                epochs=fl.server_epochs, batch_size=train_cfg.batch_size,
+                key=kg, lr=lr)
+        cb = comm.round_comm_bytes(state["online"], plan)
+        hist.loss.append(sum(losses) / max(1, len(losses)))
+        hist.round_stage.append(plan.stage)
+        hist.download_bytes.append(cb["download"])
+        hist.upload_bytes.append(cb["upload"])
+        if log:
+            log(f"round {plan.round_idx + 1}/{fl.rounds} stage {plan.stage} "
+                f"loss {hist.loss[-1]:.4f} lr {lr:.2e} "
+                f"down {cb['download'] / 1e6:.2f}MB up {cb['upload'] / 1e6:.2f}MB")
+    return state, hist

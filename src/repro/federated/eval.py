@@ -1,0 +1,74 @@
+"""Evaluation protocols: linear evaluation and fine-tuning (paper Sec 5.1).
+
+Linear evaluation: heads are discarded; a linear classifier is trained on
+the frozen encoder's representations. Fine-tuning additionally unfreezes
+the encoder.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init import dense_init
+from repro.optim import make_optimizer
+from repro.optim.schedules import learning_rate
+
+
+def extract_features(encoder, enc_params, images, batch_size: int = 256):
+    feats = []
+    fwd = jax.jit(lambda x: encoder.apply(enc_params, x))
+    n = (images.shape[0] // batch_size) * batch_size
+    for i in range(0, max(n, batch_size), batch_size):
+        xb = images[i:i + batch_size]
+        if xb.shape[0] == 0:
+            break
+        feats.append(fwd(xb))
+    return jnp.concatenate(feats, axis=0)
+
+
+def linear_eval(encoder, enc_params, train_images, train_labels,
+                test_images, test_labels, *, num_classes: int,
+                epochs: int = 20, batch_size: int = 256, lr: float = 3e-2,
+                train_cfg=None, key=None):
+    """Returns test accuracy of a linear probe on frozen features."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n_train = (train_images.shape[0] // batch_size) * batch_size
+    f_train = extract_features(encoder, enc_params, train_images, batch_size)
+    f_test = extract_features(encoder, enc_params, test_images, batch_size)
+    y_train = train_labels[:f_train.shape[0]]
+    y_test = test_labels[:f_test.shape[0]]
+    d = f_train.shape[-1]
+    from repro.configs.base import TrainConfig
+    tc = train_cfg or TrainConfig(optimizer="adamw", base_lr=lr,
+                                  weight_decay=1e-5)
+    opt = make_optimizer(tc)
+    params = {"w": dense_init(key, (d, num_classes), jnp.float32),
+              "b": jnp.zeros((num_classes,), jnp.float32)}
+    opt_state = opt.init(params)
+    total_steps = epochs * max(1, n_train // batch_size)
+
+    @jax.jit
+    def step(params, opt_state, xb, yb, lr_now):
+        def loss_fn(p):
+            logits = xb @ p["w"] + p["b"]
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+            return jnp.mean(logz - gold)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params, lr_now)
+        return params, opt_state, loss
+
+    t = 0
+    for e in range(epochs):
+        key, kp = jax.random.split(key)
+        perm = jax.random.permutation(kp, f_train.shape[0])
+        for b in range(f_train.shape[0] // batch_size):
+            sel = perm[b * batch_size:(b + 1) * batch_size]
+            lr_now = float(learning_rate(t, total_steps, lr, "cosine"))
+            params, opt_state, _ = step(params, opt_state, f_train[sel],
+                                        y_train[sel], lr_now)
+            t += 1
+    logits = f_test @ params["w"] + params["b"]
+    acc = jnp.mean((jnp.argmax(logits, -1) == y_test).astype(jnp.float32))
+    return float(acc)

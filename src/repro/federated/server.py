@@ -1,0 +1,79 @@
+"""Server-side mechanisms: calibration (paper Algorithm 1 line 7) and the
+round bookkeeping (stage transitions, weight transfer, client sampling).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedule as sched
+from repro.core import ssl as ssl_mod
+from repro.data.augment import two_views
+from repro.federated.masks import stage_update_mask
+
+
+def make_calibration_step(encoder, ssl_cfg, opt, *, sub_layers: int):
+    """End-to-end SSL step over the current sub-model (active_from=0)."""
+    @jax.jit
+    def step(state, opt_state, images, key, lr):
+        x1, x2 = two_views(key, images)
+
+        def loss_fn(online):
+            st = {**state, "online": online}
+            return ssl_mod.ssl_loss(st, x1, x2, encoder, ssl_cfg,
+                                    sub_layers=sub_layers, active_from=0)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["online"])
+        mask = stage_update_mask(state["online"], sub_layers, 0)
+        new_online, opt_state = opt.update(grads, opt_state,
+                                           state["online"], lr, mask)
+        state = {**state, "online": new_online}
+        state = ssl_mod.momentum_update(state, ssl_cfg.momentum)
+        return state, opt_state, metrics
+
+    return step
+
+
+def server_calibrate(state, aux_images, step_fn, opt, *, epochs: int,
+                     batch_size: int, key, lr):
+    """Train the aggregated sub-model end-to-end on D_g (Algorithm 1 l.7).
+
+    Uses the server's own optimizer state (fresh per round, like clients).
+    """
+    opt_state = opt.init(state["online"])
+    n = aux_images.shape[0]
+    bs = min(batch_size, n)
+    for e in range(epochs):
+        key, kp = jax.random.split(key)
+        perm = jax.random.permutation(kp, n)
+        for b in range(n // bs):
+            key, kb = jax.random.split(key)
+            sel = jax.lax.dynamic_slice_in_dim(perm, b * bs, bs)
+            state, opt_state, _ = step_fn(state, opt_state,
+                                          aux_images[sel], kb, lr)
+    return state
+
+
+def begin_stage(state, stage: int, *, weight_transfer: bool):
+    """Stage-transition housekeeping: L_{s-1} -> L_s weight transfer."""
+    if not weight_transfer or stage < 2:
+        return state
+    online = dict(state["online"])
+    online["enc"] = sched.transfer_model(online["enc"], None, stage)
+    out = {**state, "online": online}
+    if "target" in state:
+        out["target"] = {
+            "enc": sched.transfer_model(dict(state["target"]["enc"]), None,
+                                        stage),
+            "proj": state["target"]["proj"],
+        }
+    return out
+
+
+def sample_clients(key, num_clients: int, clients_per_round: int):
+    if not clients_per_round or clients_per_round >= num_clients:
+        return list(range(num_clients))
+    idx = jax.random.choice(key, num_clients, (clients_per_round,),
+                            replace=False)
+    return [int(i) for i in idx]

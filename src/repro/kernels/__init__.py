@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the SSL/FL compute hot-spots, each validated in
+# interpret mode against the pure-jnp oracle in ref.py:
+#   flash_attention — GQA causal/window online-softmax attention
+#   mamba2_scan     — chunked SSD scan with VMEM-resident state
+#   infonce         — fused (B,B) contrastive logits + cross-entropy
+#   rmsnorm         — fused row-blocked RMSNorm
+from repro.kernels.ops import (  # noqa: F401
+    flash_attention, fused_info_nce, fused_rmsnorm, ssd_scan)

@@ -1,0 +1,98 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each wrapper handles padding to TPU-aligned block shapes, dtype policy and
+the CPU fallback (interpret mode). On CPU (no TPU platform) the wrappers
+run the kernels with ``interpret=True`` so behaviour is identical
+everywhere; on TPU the compiled kernels run natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import infonce as nce
+from repro.kernels import mamba2_scan as ms
+from repro.kernels import rmsnorm as rn
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, axis: int, mult: int, value=0.0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = None):
+    """q: (B,S,Hq,hd); k,v: (B,T,Hkv,hd) -> (B,S,Hq,hd) (BSHD layout)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    scale = 1.0 / (q.shape[-1] ** 0.5)    # true head dim, pre-padding
+    qt, S = _pad_to(qt, 2, bq)
+    kt, T = _pad_to(kt, 2, bk)
+    vt, _ = _pad_to(vt, 2, bk)
+    qt, hd = _pad_to(qt, 3, 128)
+    kt, _ = _pad_to(kt, 3, 128)
+    vt, _ = _pad_to(vt, 3, 128)
+    # padded kv positions must never win the softmax: causal masking already
+    # excludes them for kpos > qpos; padded q rows are sliced off below.
+    out = fa.flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                  bq=bq, bk=bk, scale=scale, kv_len=T,
+                                  interpret=interpret)
+    return out[:, :, :S, :hd].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xh, dt, a, Bm, Cm, *, chunk: int = 128, interpret: bool = None):
+    """Chunked SSD scan; see kernels.mamba2_scan."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    S = xh.shape[1]
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    return ms.ssd_scan_bshpn(xh, dt, a, Bm, Cm, chunk=c, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "interpret"))
+def fused_info_nce(q, k, tau: float = 0.2, interpret: bool = None):
+    """Mean InfoNCE loss over L2-normalized rows of q against k."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+    kn = k / jnp.maximum(jnp.linalg.norm(k, axis=-1, keepdims=True), 1e-12)
+    B, d = qn.shape
+    br = 128 if B % 128 == 0 else B
+    qn, _ = _pad_to(qn, 1, 128)
+    kn, _ = _pad_to(kn, 1, 128)
+    rows = nce.info_nce_rows(qn.astype(jnp.float32), kn.astype(jnp.float32),
+                             tau, br=br, bc=br, interpret=interpret)
+    return jnp.mean(rows)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def fused_rmsnorm(x, scale, eps: float = 1e-5, interpret: bool = None):
+    """x: (..., d) -> same shape."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    R = x2.shape[0]
+    br = 256
+    while R % br != 0:
+        br //= 2
+        if br == 1:
+            break
+    out = rn.rmsnorm_rows(x2, scale, eps, br=max(1, br), interpret=interpret)
+    return out.reshape(shape)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (CPU ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.sdpa import sdpa_dense
+from repro.models.layers.mamba2 import ssd_chunked
+
+
+def sdpa_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,Hq,S,hd); k,v: (B,Hkv,T,hd) -> (B,Hq,S,hd)."""
+    Hq, Hkv = q.shape[1], k.shape[1]
+    rep = Hq // Hkv
+    kk = jnp.repeat(k, rep, axis=1) if rep > 1 else k
+    vv = jnp.repeat(v, rep, axis=1) if rep > 1 else v
+    out = sdpa_dense(q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+                     vv.transpose(0, 2, 1, 3), causal=causal, window=window,
+                     compute_dtype=jnp.float32)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def ssd_scan_ref(xh, dt, a, Bm, Cm, *, chunk: int = 128):
+    """Matches kernels.mamba2_scan.ssd_scan_bshpn (a = dt * A)."""
+    A_unit = jnp.ones((xh.shape[2],), jnp.float32)
+    # ssd_chunked expects dt and A separately with a = dt*A; reuse it by
+    # passing dt=a ("dt"=log-decay) only for the decay term. Simpler: call
+    # with dt_orig and A derived per-step is impossible (A varies); instead
+    # re-derive: ssd_chunked uses a = dt * A internally, so feed dt and a/dt.
+    # To stay exact we inline the same math with explicit a.
+    y, _ = _ssd_explicit(xh, dt, a, Bm, Cm, chunk)
+    return y.astype(xh.dtype)
+
+
+def _ssd_explicit(xh, dt, a, Bm, Cm, chunk):
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    xs = (
+        xh.astype(jnp.float32).reshape(Bsz, nc, chunk, H, P)
+        .transpose(1, 0, 2, 3, 4),
+        dt.astype(jnp.float32).reshape(Bsz, nc, chunk, H).transpose(1, 0, 2, 3),
+        a.astype(jnp.float32).reshape(Bsz, nc, chunk, H).transpose(1, 0, 2, 3),
+        Bm.astype(jnp.float32).reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3),
+        Cm.astype(jnp.float32).reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3),
+    )
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    i = jnp.arange(chunk)
+    causal = (i[:, None] >= i[None, :])
+
+    def step(h, inp):
+        x_c, dt_c, a_c, B_c, C_c = inp
+        cum = jnp.cumsum(a_c, axis=1)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]
+        L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        CB = jnp.einsum("bin,bjn->bij", C_c, B_c)
+        M = CB[..., None] * L * dt_c[:, None, :, :]
+        y_diag = jnp.einsum("bijh,bjhp->bihp", M, x_c)
+        y_off = jnp.einsum("bin,bhpn->bihp", C_c, h) * \
+            jnp.exp(cum)[..., None]
+        w = jnp.exp(cum[:, -1:, :] - cum) * dt_c
+        st = jnp.einsum("bjh,bjn,bjhp->bhpn", w, B_c, x_c)
+        h_new = h * jnp.exp(jnp.sum(a_c, axis=1))[:, :, None, None] + st
+        return h_new, y_diag + y_off
+
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def info_nce_rows_ref(q, k, tau: float):
+    """Per-row InfoNCE (inputs L2-normalized). Returns (B,) fp32."""
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) / tau
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.diagonal(logits)
+    return logz - gold
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,131 @@
+"""ShapeDtypeStruct stand-ins for every lowered input (no allocation).
+
+``input_specs(arch_id, shape_name, mesh, mode)`` returns (step_args, cfg):
+abstract arrays carrying NamedShardings, ready for
+``jax.jit(step).lower(*step_args)``. Parameters and optimizer state are
+shaped with ``jax.eval_shape`` over the real initializers, so the dry-run
+exercises exactly the structures the launchers train/serve.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, load_arch, load_train
+from repro.launch import steps as steps_mod
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.optim import make_optimizer
+from repro.sharding import rules
+
+
+def _with_shardings(shapes_tree, specs_tree, mesh):
+    return jax.tree.map(
+        lambda s, spec: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, spec)),
+        shapes_tree, specs_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def param_shapes(cfg):
+    if steps_mod.is_encdec(cfg):
+        return jax.eval_shape(
+            lambda: encdec_mod.init_encdec(jax.random.PRNGKey(0), cfg))
+    return jax.eval_shape(lambda: lm_mod.init_lm(jax.random.PRNGKey(0), cfg))
+
+
+def sharded_params(cfg, mesh):
+    shapes = param_shapes(cfg)
+    specs = rules.param_pspecs(shapes, mesh)
+    return _with_shardings(shapes, specs, mesh), specs
+
+
+def batch_shapes(cfg, shape, *, for_train: bool):
+    """Token/label/frontend abstract batch for one global step."""
+    B, S = shape.global_batch, shape.seq_len
+    fe = cfg.frontend_embed_len
+    if steps_mod.is_encdec(cfg):
+        d = {"frontend": jax.ShapeDtypeStruct((B, fe, cfg.d_model),
+                                              jnp.float32),
+             "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if for_train:
+            d["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return d
+    tok_len = S - fe if fe else S
+    d = {"tokens": jax.ShapeDtypeStruct((B, tok_len), jnp.int32)}
+    if fe:
+        d["frontend"] = jax.ShapeDtypeStruct((B, fe, cfg.d_model),
+                                             jnp.float32)
+    if for_train:
+        d["labels"] = jax.ShapeDtypeStruct((B, tok_len), jnp.int32)
+    return d
+
+
+def input_specs(arch_id: str, shape_name: str, mesh, *,
+                mode: str = None, cfg_override=None):
+    """Returns (step_fn, step_args, cfg, train_cfg)."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = steps_mod.cfg_for_shape(cfg_override or load_arch(arch_id),
+                                  shape_name)
+    train_cfg = load_train(arch_id)
+    mode = mode or ("train" if shape.kind == "train" else shape.kind)
+
+    if mode in ("train", "train_lw"):
+        step, opt = steps_mod.make_train_step(cfg, train_cfg, mode=mode)
+        p_sds, p_specs = sharded_params(cfg, mesh)
+        opt_shapes = jax.eval_shape(opt.init, p_sds)
+        opt_specs = rules.opt_state_specs(opt_shapes, p_specs,
+                                          train_cfg.optimizer, mesh)
+        opt_sds = _with_shardings(opt_shapes, opt_specs, mesh)
+        b_shapes = batch_shapes(cfg, shape, for_train=True)
+        b_sds = _with_shardings(b_shapes, rules.batch_specs(b_shapes, mesh),
+                                mesh)
+        args = [p_sds, opt_sds, b_sds]
+        if mode == "train_lw":
+            args.append(p_sds)          # broadcast global model (alignment)
+        return step, tuple(args), cfg, train_cfg
+
+    if mode == "prefill":
+        step = steps_mod.make_prefill_step(cfg)
+        p_sds, _ = sharded_params(cfg, mesh)
+        b_shapes = batch_shapes(cfg, shape, for_train=False)
+        b_sds = _with_shardings(b_shapes, rules.batch_specs(b_shapes, mesh),
+                                mesh)
+        if steps_mod.is_encdec(cfg):
+            return step, (p_sds, b_sds["frontend"], b_sds["tokens"]), \
+                cfg, train_cfg
+        return step, (p_sds, b_sds), cfg, train_cfg
+
+    if mode == "decode":
+        step = steps_mod.make_decode_step(cfg)
+        p_sds, _ = sharded_params(cfg, mesh)
+        B, S = shape.global_batch, shape.seq_len
+        cdt = jnp.dtype(cfg.compute_dtype)
+        if steps_mod.is_encdec(cfg):
+            cache_shapes = jax.eval_shape(
+                lambda: encdec_mod.init_dec_caches(cfg, B, S, cdt))
+        else:
+            cache_shapes = jax.eval_shape(
+                lambda: lm_mod.init_caches(cfg, B, S, cdt))
+        c_specs = rules.cache_pspecs(cache_shapes, mesh, B)
+        c_sds = _with_shardings(cache_shapes, c_specs, mesh)
+        tok_spec = rules.batch_specs(
+            {"t": jax.ShapeDtypeStruct((B, 1), jnp.int32)}, mesh)["t"]
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                   sharding=NamedSharding(mesh, tok_spec))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        if steps_mod.is_encdec(cfg):
+            fe = cfg.frontend_embed_len
+            mem_spec = rules.batch_specs(
+                {"m": jax.ShapeDtypeStruct((B, fe, cfg.d_model),
+                                           jnp.float32)}, mesh)["m"]
+            mem = jax.ShapeDtypeStruct(
+                (B, fe, cfg.d_model), jnp.float32,
+                sharding=NamedSharding(mesh, mem_spec))
+            return step, (p_sds, c_sds, tok, pos, mem), cfg, train_cfg
+        return step, (p_sds, c_sds, tok, pos), cfg, train_cfg
+
+    raise ValueError(mode)

@@ -1,0 +1,28 @@
+"""Production mesh definitions (TPU v5e).
+
+Single pod: 256 chips as (16, 16) = ("data", "model").
+Multi-pod:  2 pods x 256 chips as (2, 16, 16) = ("pod", "data", "model").
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; tests run with the
+single real CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip), used by repro.roofline
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

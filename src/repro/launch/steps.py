@@ -1,0 +1,160 @@
+"""Step functions lowered by the dry-run / launchers, per (arch, mode).
+
+Modes
+  train      — end-to-end local SSL train step (paper baseline FedMoCo):
+               next-token loss, grads, optimizer update.
+  train_lw   — LW-FedSSL local step at the *final* stage (full-depth
+               forward, only L_S trained, representation alignment against
+               the broadcast global model) — the paper's technique.
+  prefill    — full-prompt forward, last-position logits.
+  decode     — one-token serve step against a KV cache of seq_len.
+
+All steps are pure jit-able functions over (params, opt_state, batch, ...)
+pytrees; gradient accumulation (``train_cfg.microbatch``) runs as a
+``lax.scan`` over microbatch slices so only one microbatch's activations
+are ever live.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ssl import lm_ssl_loss
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.optim import make_optimizer
+from repro.federated.masks import stage_update_mask
+
+ALIGN_WEIGHT = 0.01
+TAU = 0.2
+
+
+def cfg_for_shape(cfg, shape_name: str):
+    """long_500k: quadratic-attention archs switch to sliding window 8192.
+
+    SSM/hybrid run natively; DeepSeek's MLA keeps the full-context latent
+    cache (the compressed cache is the point of MLA — see DESIGN.md).
+    """
+    if shape_name == "long_500k" and cfg.window == 0 and cfg.mla is None \
+            and cfg.family in ("dense", "vlm", "audio", "moe"):
+        return dataclasses.replace(cfg, window=8192)
+    return cfg
+
+
+def is_encdec(cfg) -> bool:
+    return bool(cfg.cross_attention and cfg.dec_layers)
+
+
+# ---------------------------------------------------------------------------
+# training steps
+# ---------------------------------------------------------------------------
+def _loss_for(cfg, params, batch, *, sub_layers, active_from, global_params,
+              align_weight, remat):
+    if is_encdec(cfg):
+        loss, metrics = encdec_mod.encdec_loss(
+            params, batch, cfg, sub_layers=sub_layers,
+            active_from=active_from, remat=remat)
+        if align_weight and global_params is not None:
+            # Eq. 3 alignment on mean-pooled encoder memory
+            from repro.core.losses import info_nce
+            mem = encdec_mod.encode(params, batch["frontend"], cfg,
+                                    sub_layers=sub_layers,
+                                    active_from=active_from, remat=remat)
+            gmem = encdec_mod.encode(global_params, batch["frontend"], cfg,
+                                     sub_layers=sub_layers, active_from=0,
+                                     remat=remat)
+            z = jnp.mean(mem.astype(jnp.float32), axis=1)
+            zg = jax.lax.stop_gradient(
+                jnp.mean(gmem.astype(jnp.float32), axis=1))
+            la = info_nce(z, zg, TAU)
+            loss = loss + align_weight * la
+            metrics = {**metrics, "align": la}
+        return loss, metrics
+    return lm_ssl_loss(params, batch, cfg, sub_layers=sub_layers,
+                       active_from=active_from, global_params=global_params,
+                       align_weight=align_weight, tau=TAU, remat=remat)
+
+
+def make_train_step(cfg, train_cfg, *, mode: str = "train", lr: float = 1e-4):
+    """Returns step(params, opt_state, batch[, global_params]) ->
+    (params, opt_state, metrics)."""
+    opt = make_optimizer(train_cfg)
+    S = lm_mod.num_stages(cfg) if not is_encdec(cfg) else cfg.num_layers
+    lw = mode == "train_lw"
+    sub_layers = S
+    active_from = S - 1 if lw else 0
+    align_weight = ALIGN_WEIGHT if lw else 0.0
+    remat = train_cfg.remat
+    micro = train_cfg.microbatch
+
+    def grads_of(params, batch, global_params):
+        def loss_fn(p):
+            return _loss_for(cfg, p, batch, sub_layers=sub_layers,
+                             active_from=active_from,
+                             global_params=global_params,
+                             align_weight=align_weight, remat=remat)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def step(params, opt_state, batch, global_params=None):
+        if micro and micro > 1:
+            def slice_mb(i, t):
+                def f(a):
+                    mb = a.shape[0] // micro
+                    return jax.lax.dynamic_slice_in_dim(a, i * mb, mb, 0)
+                return jax.tree.map(f, t)
+
+            def body(carry, i):
+                acc, lsum = carry
+                (l, _), g = grads_of(params, slice_mb(i, batch),
+                                     global_params)
+                acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+                return (acc, lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0.0)), jnp.arange(micro))
+            grads = jax.tree.map(lambda g: g / micro, grads)
+            metrics = {"loss": lsum / micro}
+        else:
+            (loss, m), grads = grads_of(params, batch, global_params)
+            metrics = {"loss": loss, **m}
+        mask = (stage_update_mask(params, sub_layers, active_from)
+                if lw else None)
+        new_params, new_opt = opt.update(grads, opt_state, params,
+                                         jnp.float32(lr), mask)
+        return new_params, new_opt, metrics
+
+    return step, opt
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg):
+    if is_encdec(cfg):
+        def step(params, frames, tokens):
+            logits, _ = encdec_mod.prefill(params, frames, tokens, cfg)
+            return logits
+        return step
+
+    def step(params, batch):
+        logits, _ = lm_mod.prefill(params, batch["tokens"], cfg,
+                                   batch.get("frontend"))
+        return logits
+    return step
+
+
+def make_decode_step(cfg):
+    if is_encdec(cfg):
+        def step(params, caches, token, pos, memory):
+            return encdec_mod.decode_step(params, caches, token, pos,
+                                          memory, cfg)
+        return step
+
+    def step(params, caches, token, pos):
+        return lm_mod.decode_step(params, caches, token, pos, cfg)
+    return step

@@ -1,0 +1,174 @@
+"""Federated SSL training launcher.
+
+Two modes:
+  vit   — the paper's experiment: ViT backbone + MoCo v3 federated SSL on
+          synthetic images (STL-10 stand-in), any of the five schedules.
+  lm    — LM-family FedSSL: clients run next-token SSL + representation
+          alignment on synthetic token shards (reduced arch on CPU).
+
+On the production mesh the per-client local step is the pjit'd program the
+dry-run lowers (repro.launch.steps); this launcher exercises the identical
+round/stage logic at host scale so the whole FL system is runnable
+end-to-end in this container.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --mode vit \
+      --schedule lw_fedssl --rounds 12 --clients 4 --batch 64
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (FLConfig, SSLConfig, TrainConfig, load_arch,
+                                reduced)
+from repro.core import schedule as sched
+from repro.core import ssl as ssl_mod
+from repro.data import iid_partition, dirichlet_partition, synthetic_images
+from repro.data.synthetic import synthetic_tokens
+from repro.federated import aggregate, comm
+from repro.federated.driver import run_fedssl
+from repro.federated import eval as fl_eval
+from repro.optim import make_optimizer
+from repro.optim.schedules import learning_rate, scaled_base_lr
+
+
+def train_vit(args):
+    key = jax.random.PRNGKey(args.seed)
+    cfg = reduced(load_arch("vit-tiny"), num_layers=args.layers,
+                  d_model=args.d_model,
+                  num_heads=4, num_kv_heads=4, d_ff=2 * args.d_model)
+    ssl_cfg = SSLConfig(proj_hidden=256, pred_hidden=256, proj_dim=64)
+    fl = FLConfig(num_clients=args.clients, rounds=args.rounds,
+                  local_epochs=args.local_epochs, schedule=args.schedule,
+                  server_epochs=1, depth_dropout=args.depth_dropout,
+                  clients_per_round=args.clients_per_round)
+    tc = TrainConfig(batch_size=args.batch, base_lr=1.5e-4)
+    kd, key = jax.random.split(key)
+    images, labels = synthetic_images(kd, args.samples, 10, 32)
+    if args.dirichlet_beta > 0:
+        idx = dirichlet_partition(jax.device_get(labels), fl.num_clients,
+                                  args.dirichlet_beta, seed=args.seed)
+    else:
+        idx = iid_partition(args.samples, fl.num_clients, seed=args.seed)
+    aux = images[:max(args.batch, args.samples // 10)]
+    t0 = time.time()
+    state, hist = run_fedssl(
+        cfg, ssl_cfg, fl, tc, images=images,
+        client_indices=[jnp.asarray(i) for i in idx], aux_images=aux,
+        key=key, log=print)
+    print(f"training done in {time.time() - t0:.1f}s; "
+          f"total comm {hist.total_comm / 1e6:.2f} MB")
+    enc = ssl_mod.make_vit_encoder(cfg)
+    n_eval = min(args.samples, 512)
+    acc = fl_eval.linear_eval(
+        enc, state["online"]["enc"], images[:n_eval], labels[:n_eval],
+        images[n_eval:2 * n_eval], labels[n_eval:2 * n_eval],
+        num_classes=10, epochs=5, batch_size=64)
+    print(f"linear evaluation accuracy: {acc * 100:.2f}%")
+    return acc
+
+
+def train_lm(args):
+    """LM-family layer-wise FedSSL on token shards (reduced arch)."""
+    from repro.core.ssl import lm_ssl_loss
+    from repro.models import lm as lm_mod
+
+    key = jax.random.PRNGKey(args.seed)
+    cfg = reduced(load_arch(args.arch))
+    S = lm_mod.num_stages(cfg)
+    fl = FLConfig(num_clients=args.clients, rounds=args.rounds,
+                  local_epochs=args.local_epochs, schedule=args.schedule)
+    tc = TrainConfig(batch_size=args.batch, base_lr=3e-4)
+    plans = sched.build_schedule(fl, S)
+    opt = make_optimizer(tc)
+    kd, ki, key = jax.random.split(key, 3)
+    toks, labs = synthetic_tokens(kd, args.samples, args.seq_len,
+                                  cfg.vocab_size)
+    shards = iid_partition(args.samples, fl.num_clients, seed=args.seed)
+    params = lm_mod.init_lm(ki, cfg)
+    base_lr = scaled_base_lr(tc.base_lr, tc.batch_size)
+
+    step_cache = {}
+
+    def get_step(plan):
+        sig = (plan.sub_layers, plan.active_from, plan.align)
+        if sig not in step_cache:
+            @jax.jit
+            def train_step(params, opt_state, batch, global_params, lr):
+                def loss_fn(p):
+                    return lm_ssl_loss(
+                        p, batch, cfg, sub_layers=sig[0], active_from=sig[1],
+                        global_params=global_params if sig[2] else None,
+                        align_weight=0.01 if sig[2] else 0.0)
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+                from repro.federated.masks import stage_update_mask
+                mask = stage_update_mask(params, sig[0], sig[1])
+                p2, o2 = opt.update(g, opt_state, params, lr, mask)
+                return p2, o2, m
+            step_cache[sig] = train_step
+        return step_cache[sig]
+
+    hist = []
+    for plan in plans:
+        if plan.new_stage and fl.weight_transfer:
+            params = sched.transfer_model(params, cfg, plan.stage)
+        lr = float(learning_rate(plan.round_idx, fl.rounds, base_lr,
+                                 tc.lr_schedule))
+        step = get_step(plan)
+        global_params = jax.tree.map(jnp.copy, params) if plan.align else None
+        outs, losses = [], []
+        for ci in range(fl.num_clients):
+            p_i = jax.tree.map(jnp.asarray, params)
+            o_i = opt.init(p_i)
+            ix = shards[ci]
+            nb = max(1, len(ix) // tc.batch_size)
+            for b in range(nb * fl.local_epochs):
+                sel = ix[(b * tc.batch_size) % max(1, len(ix) - tc.batch_size):]
+                sel = sel[:tc.batch_size]
+                batch = {"tokens": toks[sel], "labels": labs[sel]}
+                p_i, o_i, m = step(p_i, o_i, batch, global_params,
+                                   jnp.float32(lr))
+            outs.append(p_i)
+            losses.append(float(m["loss"]))
+        w = aggregate.client_weights([len(shards[i])
+                                      for i in range(fl.num_clients)])
+        params = aggregate.fedavg(outs, w)
+        hist.append(sum(losses) / len(losses))
+        print(f"round {plan.round_idx + 1}/{fl.rounds} stage {plan.stage} "
+              f"loss {hist[-1]:.4f}")
+    print(f"final loss {hist[-1]:.4f} (start {hist[0]:.4f})")
+    return params, hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("vit", "lm"), default="vit")
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--schedule", default="lw_fedssl",
+                    choices=sched.SCHEDULES)
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--clients-per-round", type=int, default=0)
+    ap.add_argument("--local-epochs", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--samples", type=int, default=1024)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--depth-dropout", type=float, default=0.0)
+    ap.add_argument("--dirichlet-beta", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.mode == "vit":
+        train_vit(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

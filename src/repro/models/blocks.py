@@ -1,0 +1,221 @@
+"""Block-level composition: one residual block per kind.
+
+Kinds: "dense" (GQA attn + MLP), "moe" (GQA attn + MoE FFN),
+"mla_moe" (latent attention + MoE), "mamba" (Mamba2), "mlstm"/"slstm" (xLSTM),
+"attn_only" (Zamba2 shared attention block: attn + MLP on the residual
+stream), "enc" (bidirectional attn + MLP), "cross" (decoder block with
+self + cross attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention as attn
+from repro.models.layers import mamba2, mla, moe, xlstm
+from repro.models.layers.mlp import mlp_apply, mlp_init
+from repro.models.layers.norms import rmsnorm, rmsnorm_init
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def block_init(key, cfg, kind: str):
+    dt = _dt(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind == "mamba":
+        return {"ln": rmsnorm_init(d, dt), "mamba": mamba2.mamba2_init(ks[0], cfg, dt)}
+    if kind == "mlstm":
+        return {"ln": rmsnorm_init(d, dt), "mlstm": xlstm.mlstm_init(ks[0], cfg, dt)}
+    if kind == "slstm":
+        return {"ln": rmsnorm_init(d, dt), "slstm": xlstm.slstm_init(ks[0], cfg, dt)}
+    if kind in ("dense", "attn_only", "enc"):
+        a = attn.attn_init(ks[0], cfg, dt)
+        return {"ln1": rmsnorm_init(d, dt), "attn": a,
+                "ln2": rmsnorm_init(d, dt),
+                "mlp": mlp_init(ks[1], d, cfg.d_ff, cfg.act, dt)}
+    if kind == "moe":
+        a = attn.attn_init(ks[0], cfg, dt)
+        return {"ln1": rmsnorm_init(d, dt), "attn": a,
+                "ln2": rmsnorm_init(d, dt), "moe": moe.moe_init(ks[1], cfg, dt)}
+    if kind == "mla_moe":
+        a = mla.mla_init(ks[0], cfg, dt)
+        return {"ln1": rmsnorm_init(d, dt), "attn": a,
+                "ln2": rmsnorm_init(d, dt), "moe": moe.moe_init(ks[1], cfg, dt)}
+    if kind == "cross":
+        return {"ln1": rmsnorm_init(d, dt), "attn": attn.attn_init(ks[0], cfg, dt),
+                "ln_x": rmsnorm_init(d, dt), "xattn": attn.attn_init(ks[1], cfg, dt),
+                "ln2": rmsnorm_init(d, dt),
+                "mlp": mlp_init(ks[2], d, cfg.d_ff, cfg.act, dt)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch: grouped (per-sample capacity) for S>1, dense for decode
+# ---------------------------------------------------------------------------
+def _moe_ffn(params, x, cfg):
+    """x: (B, S, d) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    logits = (xc @ params["router"].astype(cdt)).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, m.experts_per_token)            # (B,S,k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    frac = jnp.mean(jax.nn.one_hot(topi, m.num_experts, dtype=jnp.float32),
+                    axis=(0, 1, 2))
+    aux = m.num_experts * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    wg = params["w_gate"].astype(cdt)
+    wu = params["w_up"].astype(cdt)
+    wd = params["w_down"].astype(cdt)
+    if S == 1:
+        # decode: small-batch serving is weight-memory-bound; compute all
+        # experts densely and combine (every expert's weights stream from HBM
+        # regardless — see DESIGN.md).
+        w_tok = jnp.sum(jax.nn.one_hot(topi, m.num_experts, dtype=jnp.float32)
+                        * topv[..., None], axis=2)                    # (B,1,E)
+        h = jax.nn.silu(jnp.einsum("bsd,edf->bsef", xc, wg)) * \
+            jnp.einsum("bsd,edf->bsef", xc, wu)
+        y = jnp.einsum("bsef,efd->bsed", h, wd)
+        out = jnp.einsum("bsed,bse->bsd", y, w_tok.astype(cdt))
+    else:
+        # per-sample (GShard group = batch row) capacity dispatch
+        cap = max(1, min(S, int(S * m.experts_per_token * m.capacity_factor
+                                / m.num_experts)))
+        w_se = jnp.sum(jax.nn.one_hot(topi, m.num_experts, dtype=jnp.float32)
+                       * topv[..., None], axis=2)                     # (B,S,E)
+        w_es = w_se.transpose(0, 2, 1)                                # (B,E,S)
+        selv, seli = jax.lax.top_k(w_es, cap)                         # (B,E,C)
+        bidx = jnp.arange(B)[:, None, None]
+        xin = xc[bidx, seli]                                          # (B,E,C,d)
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, wg)) * \
+            jnp.einsum("becd,edf->becf", xin, wu)
+        y = jnp.einsum("becf,efd->becd", h, wd)
+        y = y * selv[..., None].astype(cdt)
+        out = jnp.zeros((B, S, d), cdt).at[bidx, seli].add(y)
+    if m.num_shared_experts:
+        out = out + moe.shared_expert_ffn(params, x, cfg).astype(cdt)
+    return out.astype(x.dtype), aux * m.router_aux_loss
+
+
+# ---------------------------------------------------------------------------
+# full-sequence apply (train / prefill).  Returns (x, aux_loss)
+# ---------------------------------------------------------------------------
+def block_apply(params, x, cfg, kind: str, positions=None, memory=None):
+    aux = jnp.float32(0.0)
+    if kind == "mamba":
+        return x + mamba2.mamba2_apply(params["mamba"],
+                                       rmsnorm(params["ln"], x, cfg.norm_eps),
+                                       cfg), aux
+    if kind == "mlstm":
+        return x + xlstm.mlstm_apply(params["mlstm"],
+                                     rmsnorm(params["ln"], x, cfg.norm_eps),
+                                     cfg), aux
+    if kind == "slstm":
+        return x + xlstm.slstm_apply(params["slstm"],
+                                     rmsnorm(params["ln"], x, cfg.norm_eps),
+                                     cfg), aux
+    if kind == "enc":
+        cfg = dataclasses.replace(cfg, causal=False)
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        x = x + attn.attn_apply(params["attn"], h, cfg, positions)
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        return x + mlp_apply(params["mlp"], h, cfg.act,
+                             jnp.dtype(cfg.compute_dtype)), aux
+    if kind in ("dense", "attn_only"):
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        x = x + attn.attn_apply(params["attn"], h, cfg, positions)
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        return x + mlp_apply(params["mlp"], h, cfg.act,
+                             jnp.dtype(cfg.compute_dtype)), aux
+    if kind == "moe":
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        x = x + attn.attn_apply(params["attn"], h, cfg, positions)
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        y, aux = _moe_ffn(params["moe"], h, cfg)
+        return x + y, aux
+    if kind == "mla_moe":
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        x = x + mla.mla_apply(params["attn"], h, cfg, positions)
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        y, aux = _moe_ffn(params["moe"], h, cfg)
+        return x + y, aux
+    if kind == "cross":
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        x = x + attn.attn_apply(params["attn"], h, cfg, positions)
+        h = rmsnorm(params["ln_x"], x, cfg.norm_eps)
+        x = x + attn.cross_attn_apply(params["xattn"], h, memory, cfg)
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        return x + mlp_apply(params["mlp"], h, cfg.act,
+                             jnp.dtype(cfg.compute_dtype)), aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# caches / states
+# ---------------------------------------------------------------------------
+def block_cache_init(cfg, kind: str, batch: int, seq_len: int, dtype):
+    if kind == "mamba":
+        return mamba2.init_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm.slstm_init_state(cfg, batch)
+    if kind == "mla_moe":
+        return mla.init_cache(cfg, batch, seq_len, dtype)
+    return attn.init_cache(cfg, batch, seq_len, dtype)     # dense/moe/attn_only/cross
+
+
+def block_decode(params, x, cache, cur_pos, cfg, kind: str, memory=None):
+    """Single-token decode step. x: (B, 1, d). Returns (x, new_cache)."""
+    if kind == "mamba":
+        y, st = mamba2.mamba2_decode(params["mamba"],
+                                     rmsnorm(params["ln"], x, cfg.norm_eps),
+                                     cache, cfg)
+        return x + y, st
+    if kind == "mlstm":
+        y, st = xlstm.mlstm_decode(params["mlstm"],
+                                   rmsnorm(params["ln"], x, cfg.norm_eps),
+                                   cache, cfg)
+        return x + y, st
+    if kind == "slstm":
+        y, st = xlstm.slstm_decode(params["slstm"],
+                                   rmsnorm(params["ln"], x, cfg.norm_eps),
+                                   cache, cfg)
+        return x + y, st
+    if kind in ("dense", "attn_only", "moe"):
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        y, cache = attn.attn_decode(params["attn"], h, cache, cur_pos, cfg)
+        x = x + y
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        if kind == "moe":
+            y2, _ = _moe_ffn(params["moe"], h, cfg)
+        else:
+            y2 = mlp_apply(params["mlp"], h, cfg.act, jnp.dtype(cfg.compute_dtype))
+        return x + y2, cache
+    if kind == "mla_moe":
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        y, cache = mla.mla_decode(params["attn"], h, cache, cur_pos, cfg)
+        x = x + y
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        y2, _ = _moe_ffn(params["moe"], h, cfg)
+        return x + y2, cache
+    if kind == "cross":
+        h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+        y, cache = attn.attn_decode(params["attn"], h, cache, cur_pos, cfg)
+        x = x + y
+        h = rmsnorm(params["ln_x"], x, cfg.norm_eps)
+        x = x + attn.cross_attn_apply(params["xattn"], h, memory, cfg)
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        return x + mlp_apply(params["mlp"], h, cfg.act,
+                             jnp.dtype(cfg.compute_dtype)), cache
+    raise ValueError(kind)

@@ -1,0 +1,127 @@
+"""Grouped-query attention with causal / sliding-window masking and KV cache.
+
+Reference (jnp) path used for lowering & CPU tests; the Pallas flash-attention
+kernel in ``repro.kernels.flash_attention`` implements the identical math with
+VMEM tiling for TPU and is validated against this module's oracle. Long
+sequences automatically take the streaming online-softmax path in
+``repro.models.layers.sdpa``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init import dense_init
+from repro.models.layers.rope import apply_rope
+from repro.models.layers.sdpa import sdpa
+
+BIG_POS = jnp.int32(2**30)
+
+
+def attn_init(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.num_heads * hd), dtype),
+        "wk": dense_init(ks[1], (d, cfg.num_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (d, cfg.num_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, d), dtype),
+    }
+
+
+def _repeat_kv(k, num_heads):
+    rep = num_heads // k.shape[2]
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def attn_apply(params, x, cfg, positions=None, *, return_kv: bool = False):
+    """Full-sequence attention (train / prefill). x: (B, S, d)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    q = (xc @ params["wq"].astype(cdt)).reshape(B, S, cfg.num_heads, hd)
+    k = (xc @ params["wk"].astype(cdt)).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (xc @ params["wv"].astype(cdt)).reshape(B, S, cfg.num_kv_heads, hd)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = sdpa(q, _repeat_kv(k, cfg.num_heads), _repeat_kv(v, cfg.num_heads),
+               causal=cfg.causal, window=cfg.window, compute_dtype=cdt)
+    y = (out.reshape(B, S, cfg.num_heads * hd) @ params["wo"].astype(cdt))
+    y = y.astype(x.dtype)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer when sliding-window)
+# ---------------------------------------------------------------------------
+def cache_size(cfg, seq_len: int) -> int:
+    return min(seq_len, cfg.window) if cfg.window else seq_len
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype):
+    """Per-layer cache leaves; stacked over layers by the model."""
+    W = cache_size(cfg, seq_len)
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, W, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, W, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.full((W,), -1, jnp.int32),
+    }
+
+
+def attn_decode(params, x, cache, cur_pos, cfg):
+    """Single-token decode. x: (B, 1, d); cur_pos: scalar int32.
+
+    Keys are stored *post-RoPE*, so ring-buffer eviction needs no re-rotation.
+    Empty slots carry position 2^30 and are excluded by the causal mask.
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    W = cache["k"].shape[1]
+    xc = x.astype(cdt)
+    q = (xc @ params["wq"].astype(cdt)).reshape(B, 1, cfg.num_heads, hd)
+    k = (xc @ params["wk"].astype(cdt)).reshape(B, 1, cfg.num_kv_heads, hd)
+    v = (xc @ params["wv"].astype(cdt)).reshape(B, 1, cfg.num_kv_heads, hd)
+    pos = jnp.asarray(cur_pos, jnp.int32)
+    q = apply_rope(q, pos[None, None], cfg.rope_theta)
+    k = apply_rope(k, pos[None, None], cfg.rope_theta)
+    slot = pos % W
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (slot,))
+    kpos = jnp.where(cpos >= 0, cpos, BIG_POS)
+    out = sdpa(q, _repeat_kv(ck.astype(cdt), cfg.num_heads),
+               _repeat_kv(cv.astype(cdt), cfg.num_heads),
+               causal=True, window=cfg.window, compute_dtype=cdt,
+               qpos=pos[None], kpos=kpos)
+    y = (out.reshape(B, 1, cfg.num_heads * hd) @ params["wo"].astype(cdt))
+    return y.astype(x.dtype), {"k": ck, "v": cv, "pos": cpos}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+def cross_attn_apply(params, x, memory, cfg):
+    """x: (B, S, d) queries; memory: (B, T, d) encoder output (no RoPE)."""
+    B, S, _ = x.shape
+    T = memory.shape[1]
+    hd = cfg.resolved_head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc, mc = x.astype(cdt), memory.astype(cdt)
+    q = (xc @ params["wq"].astype(cdt)).reshape(B, S, cfg.num_heads, hd)
+    k = (mc @ params["wk"].astype(cdt)).reshape(B, T, cfg.num_kv_heads, hd)
+    v = (mc @ params["wv"].astype(cdt)).reshape(B, T, cfg.num_kv_heads, hd)
+    out = sdpa(q, _repeat_kv(k, cfg.num_heads), _repeat_kv(v, cfg.num_heads),
+               causal=False, window=0, compute_dtype=cdt)
+    y = (out.reshape(B, S, cfg.num_heads * hd) @ params["wo"].astype(cdt))
+    return y.astype(x.dtype)

@@ -1,0 +1,18 @@
+"""Weight initializers."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    """Truncated-normal fan-in init (LeCun-style)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(1, shape[-1])
+    if len(shape) == 3:            # (experts, d_in, d_out) — fan-in is dim 1
+        fan_in = shape[1]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype, std: float = 0.02):
+    return (jax.random.normal(key, shape) * std).astype(dtype)

@@ -1,0 +1,182 @@
+"""Mamba2 (state-space duality) block — pure-jnp reference implementation.
+
+Chunked SSD algorithm (Dao & Gu, 2024), adapted for TPU: the sequence is
+split into chunks of ``chunk_size``; intra-chunk terms are dense matmuls
+(MXU-friendly), inter-chunk recurrence is a short ``lax.scan`` over chunk
+states. The Pallas kernel in ``repro.kernels.mamba2_scan`` implements the
+same math with explicit VMEM tiling and is validated against this module.
+
+Decode is the O(1) recurrent update on the (H, P, N) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init import dense_init
+from repro.models import scan_cfg
+from repro.models.layers.norms import rmsnorm, rmsnorm_init
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def n_heads(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm.head_dim
+
+
+def mamba2_init(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = d_inner(cfg)
+    H = n_heads(cfg)
+    conv_ch = di + 2 * s.state_dim
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj -> [z (di), x (di), B (N), C (N), dt (H)]
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * s.state_dim + H), dtype),
+        "w_out": dense_init(ks[1], (di, d), dtype),
+        "conv_w": dense_init(ks[2], (s.conv_width, conv_ch), dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((H,), jnp.float32),           # A = -exp(a_log)
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),    # softplus ~ 0.12
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        out = out + xp[:, k:k + x.shape[1]] * w[k]
+    return out + b
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked selective-state-space scan.
+
+    xh: (B, S, H, P)  inputs per head
+    dt: (B, S, H)     positive step sizes
+    A:  (H,)          negative decay rates
+    Bm, Cm: (B, S, N) input/output projections (single group)
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    a = dt * A  # (B,S,H) log-decay per step (negative)
+    # chunk-major layout for a single sequential scan over chunks; only one
+    # chunk's O(Q^2) intra-block tensors are ever live (matches the Pallas
+    # kernel's grid structure).
+    xs = (
+        xh.reshape(Bsz, nc, chunk, H, P).transpose(1, 0, 2, 3, 4),
+        dt.reshape(Bsz, nc, chunk, H).transpose(1, 0, 2, 3),
+        a.reshape(Bsz, nc, chunk, H).transpose(1, 0, 2, 3),
+        Bm.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3),
+        Cm.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3),
+    )
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    i = jnp.arange(chunk)
+    causal = (i[:, None] >= i[None, :])
+
+    def step(h, inp):
+        x_c, dt_c, a_c, B_c, C_c = inp                     # (B,Q,...)
+        cum = jnp.cumsum(a_c, axis=1)                      # (B,Q,H)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]      # (B,Q,Q,H)
+        L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        CB = jnp.einsum("bin,bjn->bij", C_c, B_c)          # (B,Q,Q)
+        M = CB[..., None] * L * dt_c[:, None, :, :]        # (B,Q,Q,H)
+        y_diag = jnp.einsum("bijh,bjhp->bihp", M, x_c)
+        # contribution of the incoming state
+        decay_from_start = jnp.exp(cum)                    # (B,Q,H)
+        y_off = jnp.einsum("bin,bhpn->bihp", C_c, h) * \
+            decay_from_start[..., None]
+        # state update
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)       # (B,Q,H)
+        w = decay_to_end * dt_c
+        st = jnp.einsum("bjh,bjn,bjhp->bhpn", w, B_c, x_c)
+        chunk_decay = jnp.exp(jnp.sum(a_c, axis=1))        # (B,H)
+        h_new = h * chunk_decay[:, :, None, None] + st
+        return h_new, y_diag + y_off
+
+    h_final, ys = jax.lax.scan(step, h0, xs,
+                               unroll=scan_cfg.chunk_unroll())  # (nc,B,Q,H,P)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def mamba2_apply(params, x, cfg, h0=None, conv0=None, *, return_state=False):
+    """Full-sequence Mamba2 block. x: (B, S, d)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    di = d_inner(cfg)
+    H = n_heads(cfg)
+    N = s.state_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    proj = (x.astype(cdt) @ params["w_in"].astype(cdt)).astype(jnp.float32)
+    z, xr, Bm, Cm, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N],
+                                  axis=-1)
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"].astype(jnp.float32),
+                                        params["conv_b"].astype(jnp.float32)))
+    xr, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+    xh = xr.reshape(B, S, H, s.head_dim)
+    chunk = min(s.chunk_size, S)
+    y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, chunk, h0)
+    y = y + xh * params["D"][None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y.astype(cdt) @ params["w_out"].astype(cdt)).astype(x.dtype)
+    if return_state:
+        conv_state = conv_in[:, -(s.conv_width - 1):, :]
+        return out, (h_final, conv_state)
+    return out
+
+
+def init_state(cfg, batch: int, dtype):
+    s = cfg.ssm
+    H = n_heads(cfg)
+    conv_ch = d_inner(cfg) + 2 * s.state_dim
+    return {
+        "h": jnp.zeros((batch, H, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), jnp.float32),
+    }
+
+
+def mamba2_decode(params, x, state, cfg):
+    """Single-token recurrent update. x: (B, 1, d)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    di = d_inner(cfg)
+    H = n_heads(cfg)
+    N = s.state_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    proj = (x[:, 0].astype(cdt) @ params["w_in"].astype(cdt)).astype(jnp.float32)
+    z, xr, Bm, Cm, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N],
+                                  axis=-1)
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)       # (B, C)
+    window = jnp.concatenate([state["conv"], conv_in[:, None]], axis=1)  # (B,K,C)
+    w = params["conv_w"].astype(jnp.float32)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w)
+                           + params["conv_b"].astype(jnp.float32))
+    xr, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])           # (B, H)
+    A = -jnp.exp(params["a_log"])
+    xh = xr.reshape(B, H, s.head_dim)
+    decay = jnp.exp(dt * A)                                # (B, H)
+    h = state["h"] * decay[:, :, None, None] + \
+        (dt[:, :, None] * xh)[..., None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm) + xh * params["D"][None, :, None]
+    y = y.reshape(B, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y.astype(cdt) @ params["w_out"].astype(cdt)).astype(x.dtype)
+    new_state = {"h": h, "conv": window[:, 1:]}
+    return out[:, None], new_state

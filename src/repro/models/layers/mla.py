@@ -1,0 +1,130 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to a rank-`kv_lora_rank` latent c_kv plus a single shared
+RoPE key; the cache stores only (c_kv, k_rope) — the memory win that makes
+500k-token decode practical. Decode uses the *absorbed* formulation
+(w_uk folded into the query, w_uv folded into the output) so per-step compute
+is O(rank) per cached token instead of expanding all heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init import dense_init
+from repro.models.layers.rope import apply_rope
+from repro.models.layers.sdpa import sdpa
+
+NEG_INF = -1e30
+
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 7)
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    p = {
+        "w_dkv": dense_init(ks[0], (d, m.kv_lora_rank), dtype),
+        "w_kr": dense_init(ks[1], (d, m.qk_rope_head_dim), dtype),
+        "w_uk": dense_init(ks[2], (H, m.kv_lora_rank, m.qk_nope_head_dim), dtype),
+        "w_uv": dense_init(ks[3], (H, m.kv_lora_rank, m.v_head_dim), dtype),
+        "wo": dense_init(ks[5], (H * m.v_head_dim, d), dtype),
+    }
+    if m.q_lora_rank:
+        p["w_dq"] = dense_init(ks[4], (d, m.q_lora_rank), dtype)
+        p["w_uq"] = dense_init(ks[6], (m.q_lora_rank, H * qd), dtype)
+    else:
+        p["w_q"] = dense_init(ks[4], (d, H * qd), dtype)
+    return p
+
+
+def _q_proj(params, xc, cfg, cdt):
+    if cfg.mla.q_lora_rank:
+        return (xc @ params["w_dq"].astype(cdt)) @ params["w_uq"].astype(cdt)
+    return xc @ params["w_q"].astype(cdt)
+
+
+def _split_q(q, cfg):
+    m = cfg.mla
+    H = cfg.num_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = q.reshape(*q.shape[:-1], H, qd)
+    return q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+
+def mla_apply(params, x, cfg, positions=None):
+    """Full-sequence MLA (train / prefill). x: (B, S, d).
+
+    The latent is expanded to per-head K/V and attention runs through the
+    shared SDPA (streaming for long sequences) — query head dim is
+    nope+rope, value head dim is v_head_dim.
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    c_kv = xc @ params["w_dkv"].astype(cdt)                     # (B,S,rank)
+    k_rope = (xc @ params["w_kr"].astype(cdt))[:, :, None, :]   # (B,S,1,rd)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    q_nope, q_rope = _split_q(_q_proj(params, xc, cfg, cdt), cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_nope = jnp.einsum("bsr,hrn->bshn", c_kv, params["w_uk"].astype(cdt))
+    v = jnp.einsum("bsr,hrv->bshv", c_kv, params["w_uv"].astype(cdt))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)              # (B,S,H,nd+rd)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))],
+        axis=-1)
+    out = sdpa(q, k, v, causal=cfg.causal, window=cfg.window, compute_dtype=cdt)
+    y = out.reshape(B, S, H * m.v_head_dim) @ params["wo"].astype(cdt)
+    return y.astype(x.dtype)
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype):
+    m = cfg.mla
+    W = min(seq_len, cfg.window) if cfg.window else seq_len
+    return {
+        "c_kv": jnp.zeros((batch, W, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, W, m.qk_rope_head_dim), dtype),
+        "pos": jnp.full((W,), -1, jnp.int32),
+    }
+
+
+def mla_decode(params, x, cache, cur_pos, cfg):
+    """Absorbed single-token decode. x: (B, 1, d)."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    cdt = jnp.dtype(cfg.compute_dtype)
+    W = cache["c_kv"].shape[1]
+    pos = jnp.asarray(cur_pos, jnp.int32)
+    xc = x.astype(cdt)
+    c_kv_new = xc @ params["w_dkv"].astype(cdt)                  # (B,1,rank)
+    k_rope_new = (xc @ params["w_kr"].astype(cdt))[:, :, None, :]
+    k_rope_new = apply_rope(k_rope_new, pos[None, None], cfg.rope_theta)[:, :, 0]
+    slot = pos % W
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, slot, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (slot,))
+
+    q_nope, q_rope = _split_q(_q_proj(params, xc, cfg, cdt), cfg)  # (B,1,H,*)
+    q_rope = apply_rope(q_rope, pos[None, None], cfg.rope_theta)
+    # absorb w_uk: q_lat (B,1,H,rank)
+    q_lat = jnp.einsum("bshn,hrn->bshr", q_nope, params["w_uk"].astype(cdt))
+    scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    logits = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv.astype(cdt))
+              + jnp.einsum("bshr,btr->bhst", q_rope, k_rope.astype(cdt)))
+    logits = logits.astype(jnp.float32) * scale
+    valid = (cpos >= 0) & (cpos <= pos)
+    if cfg.window:
+        valid = valid & (cpos > pos - cfg.window)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(cdt)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv.astype(cdt))  # (B,1,H,rank)
+    out = jnp.einsum("bshr,hrv->bshv", out_lat, params["w_uv"].astype(cdt))
+    y = out.reshape(B, 1, H * m.v_head_dim) @ params["wo"].astype(cdt)
+    return y.astype(x.dtype), {"c_kv": c_kv, "k_rope": k_rope, "pos": cpos}

@@ -1,0 +1,29 @@
+"""Feed-forward layers: SwiGLU / GELU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init import dense_init
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str = "swiglu", dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(params, x, act: str = "swiglu", compute_dtype=jnp.bfloat16):
+    xc = x.astype(compute_dtype)
+    up = xc @ params["w_up"].astype(compute_dtype)
+    if act == "swiglu":
+        gate = xc @ params["w_gate"].astype(compute_dtype)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return (h @ params["w_down"].astype(compute_dtype)).astype(x.dtype)

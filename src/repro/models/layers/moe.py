@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Expert-parallel scheme (TPU-adapted): expert weights are sharded over the
+"model" mesh axis; activations are replicated over "model". Each device owns
+``E_local`` experts, selects up to ``capacity`` of its shard's tokens per
+expert (top-C by router weight — the standard token-dropping formulation),
+computes only those FFNs, scatter-adds weighted outputs, and the partial
+outputs are summed over the "model" axis (one all-reduce per MoE layer).
+Compute per device is E_local*C*ffn — i.e. the *active* FLOPs, never the
+dense all-experts product.
+
+Used inside ``shard_map`` by the distributed model (see
+``repro.sharding.context``); called directly (e_first=0, no psum) on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init import dense_init
+
+
+def moe_init(key, cfg, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    e_ff = m.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, m.num_experts), dtype, scale=0.1),
+        "w_gate": dense_init(ks[1], (m.num_experts, d, e_ff), dtype),
+        "w_up": dense_init(ks[2], (m.num_experts, d, e_ff), dtype),
+        "w_down": dense_init(ks[3], (m.num_experts, e_ff, d), dtype),
+    }
+    if m.num_shared_experts:
+        sf = m.num_shared_experts * e_ff
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(ks2[0], (d, sf), dtype),
+            "w_up": dense_init(ks2[1], (d, sf), dtype),
+            "w_down": dense_init(ks2[2], (sf, d), dtype),
+        }
+    return p
+
+
+def capacity(num_tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = int(num_tokens * m.experts_per_token * m.capacity_factor / m.num_experts)
+    return max(4, min(num_tokens, c))
+
+
+def moe_ffn_local(params, x, cfg, e_first, e_local: int, cap: int):
+    """Local expert compute for one shard.
+
+    x: (T, d) local tokens (replicated over the model axis by the caller).
+    e_first: scalar index of this shard's first expert.
+    Returns (partial_out (T, d), aux_metrics) — caller psums partial_out over
+    the "model" axis and the aux counters over the "data"+"model" axes.
+    """
+    m = cfg.moe
+    T, d = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    logits = (xc @ params["router"].astype(cdt)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, m.experts_per_token)            # (T, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    # membership weight of this shard's experts for each token: (E_local, T)
+    w_e = jnp.zeros((e_local, T), jnp.float32)
+    tok = jnp.arange(T)
+    for k in range(m.experts_per_token):
+        rel = topi[:, k] - e_first
+        ok = (rel >= 0) & (rel < e_local)
+        rel = jnp.clip(rel, 0, e_local - 1)
+        w_e = w_e.at[rel, tok].add(jnp.where(ok, topv[:, k], 0.0))
+
+    selv, seli = jax.lax.top_k(w_e, cap)          # (E_local, C)
+    xin = jnp.take(xc, seli.reshape(-1), axis=0).reshape(e_local, cap, d)
+    # NB: under shard_map the expert dim of the weights is already the local
+    # slice (shape (E_local, ...)).
+    wg = params["w_gate"].astype(cdt)
+    wu = params["w_up"].astype(cdt)
+    wd = params["w_down"].astype(cdt)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, wg)) * \
+        jnp.einsum("ecd,edf->ecf", xin, wu)
+    y = jnp.einsum("ecf,efd->ecd", h, wd)
+    y = y * selv[..., None].astype(cdt)
+    out = jnp.zeros((T, d), cdt).at[seli.reshape(-1)].add(
+        y.reshape(e_local * cap, d))
+
+    # load-balance aux loss terms (GShard/Switch): mean routed fraction x
+    # mean router prob, per expert — computed on the full router output so it
+    # is identical on every model shard.
+    frac = jnp.mean(
+        jax.nn.one_hot(topi, m.num_experts, dtype=jnp.float32), axis=(0, 1))
+    mean_p = jnp.mean(probs, axis=0)
+    aux = m.num_experts * jnp.sum(frac * mean_p)
+    dropped = jnp.sum(w_e > 0) - jnp.sum(selv > 0)
+    return out.astype(x.dtype), {"aux": aux, "dropped": dropped}
+
+
+def shared_expert_ffn(params, x, cfg):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    sp = params["shared"]
+    h = jax.nn.silu(xc @ sp["w_gate"].astype(cdt)) * (xc @ sp["w_up"].astype(cdt))
+    return (h @ sp["w_down"].astype(cdt)).astype(x.dtype)

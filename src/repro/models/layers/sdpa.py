@@ -1,0 +1,100 @@
+"""Scaled dot-product attention: dense and streaming (online-softmax) paths.
+
+The streaming path is the jnp analogue of flash attention: an outer scan over
+query chunks and an inner scan over KV chunks carrying (row-max, row-sum,
+accumulator). It keeps live memory at O(Qc*Kc) per head instead of O(S*T),
+which is what lets 32k-token prefill lower with a sane memory footprint.
+(The Pallas kernel in ``repro.kernels.flash_attention`` additionally skips
+fully-masked KV blocks; XLA here still computes masked blocks — accounted for
+in the roofline notes.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+STREAM_THRESHOLD = 8192 * 8192  # S*T above which we stream
+
+
+def _mask(qpos, kpos, causal: bool, window: int):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m = kpos[None, :] <= qpos[:, None]
+    if window:
+        m = m & (kpos[None, :] > qpos[:, None] - window)
+    return m
+
+
+def sdpa_dense(q, k, v, *, causal: bool, window: int, compute_dtype,
+               qpos=None, kpos=None):
+    """q:(B,S,H,hd) k:(B,T,H,hd) v:(B,T,H,vd) -> (B,S,H,vd)."""
+    S, T = q.shape[1], k.shape[1]
+    if qpos is None:
+        qpos = jnp.arange(S)
+    if kpos is None:
+        kpos = jnp.arange(T)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(compute_dtype),
+                        k.astype(compute_dtype)).astype(jnp.float32) * scale
+    m = _mask(qpos, kpos, causal, window)
+    logits = jnp.where(m[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(compute_dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v.astype(compute_dtype))
+
+
+def sdpa_streaming(q, k, v, *, causal: bool, window: int, compute_dtype,
+                   q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Online-softmax attention over chunks. Same signature as sdpa_dense."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    vd = v.shape[-1]
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, T)
+    nq, nk = S // qc, T // kc
+    assert S % qc == 0 and T % kc == 0, (S, T, qc, kc)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qr = q.reshape(B, nq, qc, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_body(_, qi_and_chunk):
+        qi, qblk = qi_and_chunk                     # qblk: (B,qc,H,hd)
+        qpos = qi * qc + jnp.arange(qc)
+
+        def kv_body(carry, ki):
+            m_run, l_run, acc = carry
+            kblk = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=1)
+            kpos = ki * kc + jnp.arange(kc)
+            logits = jnp.einsum(
+                "bshd,bthd->bhst", qblk.astype(compute_dtype),
+                kblk.astype(compute_dtype)).astype(jnp.float32) * scale
+            msk = _mask(qpos, kpos, causal, window)
+            logits = jnp.where(msk[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhst,bthd->bhsd", p.astype(compute_dtype),
+                vblk.astype(compute_dtype)).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, H, qc), NEG_INF, jnp.float32),
+                jnp.zeros((B, H, qc), jnp.float32),
+                jnp.zeros((B, H, qc, vd), jnp.float32))
+        (m_run, l_run, acc), _ = jax.lax.scan(kv_body, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+        return None, out.transpose(0, 2, 1, 3).astype(compute_dtype)  # (B,qc,H,vd)
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), qr))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, vd)
+
+
+def sdpa(q, k, v, *, causal: bool, window: int, compute_dtype,
+         qpos=None, kpos=None):
+    S, T = q.shape[1], k.shape[1]
+    if S * T > STREAM_THRESHOLD and S > 1 and qpos is None and kpos is None:
+        return sdpa_streaming(q, k, v, causal=causal, window=window,
+                              compute_dtype=compute_dtype)
+    return sdpa_dense(q, k, v, causal=causal, window=window,
+                      compute_dtype=compute_dtype, qpos=qpos, kpos=kpos)

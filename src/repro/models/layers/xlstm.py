@@ -1,0 +1,278 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM and sLSTM.
+
+mLSTM: matrix memory C in R^{PxP} per head with exponential input gate and
+forget gate — parallelizable over the sequence (decay-masked attention-like
+form, used for train/prefill) with an O(1) recurrent decode step.
+
+sLSTM: scalar memory with recurrent (R) weights and exponential gating —
+inherently sequential, implemented as ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init import dense_init
+from repro.models import scan_cfg
+from repro.models.layers.norms import layernorm, layernorm_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor * d)
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * di), dtype),     # [x_inner, z gate]
+        "w_q": dense_init(ks[1], (di, di), dtype),
+        "w_k": dense_init(ks[2], (di, di), dtype),
+        "w_v": dense_init(ks[3], (di, di), dtype),
+        "w_i": dense_init(ks[4], (di, H), dtype),          # input gate (exp)
+        "w_f": dense_init(ks[5], (di, H), dtype),          # forget gate
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),           # init mostly-remember
+        "norm": rmsnorm_init(di, dtype),
+        "w_down": dense_init(ks[6], (di, d), dtype),
+    }
+
+
+def _mlstm_gates(params, xi):
+    logi = (xi @ params["w_i"].astype(jnp.float32)) + params["b_i"]
+    logf = (xi @ params["w_f"].astype(jnp.float32)) + params["b_f"]
+    return logi, jax.nn.log_sigmoid(logf)                  # log f in (-inf, 0)
+
+
+def mlstm_apply(params, x, cfg, *, return_state=False, state=None):
+    """Parallel (quadratic, decay-masked) form. x: (B, S, d)."""
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor * d)
+    H = cfg.num_heads
+    P = di // H
+    B, S, _ = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    up = x.astype(cdt) @ params["w_up"].astype(cdt)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xf = xi.astype(jnp.float32)
+    q = (xi @ params["w_q"].astype(cdt)).reshape(B, S, H, P)
+    k = (xi @ params["w_k"].astype(cdt)).reshape(B, S, H, P) / jnp.sqrt(P).astype(cdt)
+    v = (xi @ params["w_v"].astype(cdt)).reshape(B, S, H, P)
+    logi, logf = _mlstm_gates(params, xf)                  # (B,S,H)
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+    if S >= MLSTM_CHUNK and S % MLSTM_CHUNK == 0:
+        y, st = _mlstm_chunked_core(
+            q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            logi, logf, state, MLSTM_CHUNK)
+        y = y.reshape(B, S, di).astype(cdt)
+        y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+        out = (y @ params["w_down"].astype(cdt)).astype(x.dtype)
+        if return_state:
+            return out, st
+        return out
+    F = jnp.cumsum(logf, axis=1)                           # (B,S,H)
+    # D_ij = exp(F_i - F_j + i_j) for j<=i, stabilized per row
+    dmat = F[:, :, None, :] - F[:, None, :, :] + logi[:, None, :, :]
+    idx = jnp.arange(S)
+    causal = idx[:, None] >= idx[None, :]
+    dmat = jnp.where(causal[None, :, :, None], dmat, NEG_INF)
+    m = jnp.max(dmat, axis=2, keepdims=True)               # row max (B,S,1,H)
+    D = jnp.exp(dmat - m)                                  # (B,S,S,H)
+    qk = jnp.einsum("bihp,bjhp->bijh", q.astype(jnp.float32), k.astype(jnp.float32))
+    W = qk * D
+    norm = jnp.maximum(jnp.abs(jnp.sum(W, axis=2)), jnp.exp(-m[:, :, 0]))
+    y = jnp.einsum("bijh,bjhp->bihp", W, v.astype(jnp.float32)) / norm[..., None]
+    y = y.reshape(B, S, di).astype(cdt)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ params["w_down"].astype(cdt)).astype(x.dtype)
+    if return_state:
+        # build final recurrent state by replaying recurrences (decode handoff)
+        st = mlstm_init_state(cfg, B)
+        # C_S = sum_j exp(F_S - F_j + i_j) v_j k_j^T ; n_S likewise
+        wS = jnp.exp(F[:, -1:, :] - F + logi)              # (B,S,H)
+        C = jnp.einsum("bjh,bjhp,bjhq->bhpq", wS, v.astype(jnp.float32),
+                       k.astype(jnp.float32))
+        n = jnp.einsum("bjh,bjhp->bhp", wS, k.astype(jnp.float32))
+        mS = jnp.max(F[:, -1:, :] - F + logi, axis=1)      # crude stabilizer
+        st = {"C": C, "n": n, "m": mS}
+        return out, st
+    return out
+
+
+def _mlstm_chunked_core(q, k, v, logi, logf, state, chunk: int):
+    """Chunkwise-parallel stabilized mLSTM (TFLA-style).
+
+    q,k,v: (B,S,H,P) fp32; logi/logf: (B,S,H). Sequential scan over chunks of
+    length `chunk`, carrying the (C, n, m) matrix-memory state. Only one
+    chunk's O(Q^2) tensors are live at a time.
+    """
+    B, S, H, P = q.shape
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    xs = tuple(t.reshape(B, nc, chunk, *t.shape[2:]).transpose(1, 0, 2, 3, 4)
+               if t.ndim == 4 else
+               t.reshape(B, nc, chunk, H).transpose(1, 0, 2, 3)
+               for t in (q, k, v, logi, logf))
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+
+    def step(st, inp):
+        qc, kc, vc, ic, fc = inp                          # (B,Q,...)
+        F = jnp.cumsum(fc, axis=1)                        # inclusive (B,Q,H)
+        # intra-chunk log weights: D_ij = F_i - F_j + i_j (j<=i)
+        dmat = F[:, :, None, :] - F[:, None, :, :] + ic[:, None, :, :]
+        dmat = jnp.where(causal[None, :, :, None], dmat, NEG_INF)
+        # incoming-state log scale per row: F_i + m_in
+        inter = F + st["m"][:, None, :]                   # (B,Q,H)
+        m_i = jnp.maximum(jnp.max(dmat, axis=2), inter)   # (B,Q,H)
+        D = jnp.exp(dmat - m_i[:, :, None, :])            # (B,Q,Q,H)
+        w_in = jnp.exp(inter - m_i)                       # (B,Q,H)
+        qk = jnp.einsum("bihp,bjhp->bijh", qc, kc)
+        W = qk * D
+        num = jnp.einsum("bijh,bjhp->bihp", W, vc) + \
+            jnp.einsum("bihp,bhpq->bihq", qc * w_in[..., None], st["C"])
+        den = jnp.einsum("bijh,bjhp->bih", W, kc) + \
+            jnp.einsum("bihp,bhp->bih", qc * w_in[..., None], st["n"])
+        norm = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))
+        y = num / norm[..., None]
+        # state update to end of chunk
+        decay_to_end = F[:, -1:, :] - F + ic              # (B,Q,H)
+        m_out = jnp.maximum(F[:, -1, :] + st["m"], jnp.max(decay_to_end, axis=1))
+        w_st = jnp.exp(decay_to_end - m_out[:, None, :])
+        carry_w = jnp.exp(F[:, -1, :] + st["m"] - m_out)
+        C = st["C"] * carry_w[..., None, None] + \
+            jnp.einsum("bjh,bjhp,bjhq->bhpq", w_st, vc, kc)
+        n = st["n"] * carry_w[..., None] + jnp.einsum("bjh,bjhp->bhp", w_st, kc)
+        return {"C": C, "n": n, "m": m_out}, y
+
+    st_final, ys = jax.lax.scan(step, state, xs,
+                                unroll=scan_cfg.chunk_unroll())
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, st_final
+
+
+MLSTM_CHUNK = 256
+
+
+def mlstm_init_state(cfg, batch: int):
+    di = int(cfg.xlstm.proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    P = di // H
+    return {
+        "C": jnp.zeros((batch, H, P, P), jnp.float32),
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(params, x, state, cfg):
+    """O(1) recurrent step. x: (B, 1, d)."""
+    d = cfg.d_model
+    di = int(cfg.xlstm.proj_factor * d)
+    H = cfg.num_heads
+    P = di // H
+    B = x.shape[0]
+    cdt = jnp.dtype(cfg.compute_dtype)
+    up = x[:, 0].astype(cdt) @ params["w_up"].astype(cdt)
+    xi, z = jnp.split(up, 2, axis=-1)
+    xf = xi.astype(jnp.float32)
+    q = (xi @ params["w_q"].astype(cdt)).reshape(B, H, P).astype(jnp.float32)
+    k = ((xi @ params["w_k"].astype(cdt)).reshape(B, H, P) /
+         jnp.sqrt(P).astype(cdt)).astype(jnp.float32)
+    v = (xi @ params["w_v"].astype(cdt)).reshape(B, H, P).astype(jnp.float32)
+    logi, logf = _mlstm_gates(params, xf)                  # (B,H)
+    m_new = jnp.maximum(logf + state["m"], logi)
+    a = jnp.exp(logf + state["m"] - m_new)
+    b = jnp.exp(logi - m_new)
+    C = state["C"] * a[..., None, None] + b[..., None, None] * \
+        jnp.einsum("bhp,bhq->bhpq", v, k)
+    n = state["n"] * a[..., None] + b[..., None] * k
+    num = jnp.einsum("bhpq,bhq->bhp", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, di).astype(cdt)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ params["w_down"].astype(cdt)).astype(x.dtype)
+    return out[:, None], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w": dense_init(ks[0], (d, 4 * d), dtype),          # i,f,z,o pre-acts
+        "r": dense_init(ks[1], (H, P, 4 * P), dtype, scale=0.5),  # block-diag recur
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "norm": layernorm_init(d, dtype),
+        "w_down": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def slstm_init_state(cfg, batch: int):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(params, xt, st, cfg):
+    """xt: (B, 4d) pre-activation from input; st: state dict."""
+    d = cfg.d_model
+    H = cfg.num_heads
+    P = d // H
+    B = xt.shape[0]
+    hprev = st["h"].reshape(B, H, P)
+    rec = jnp.einsum("bhp,hpq->bhq", hprev,
+                     params["r"].astype(jnp.float32)).reshape(B, 4 * d)
+    pre = xt + rec + params["b"]
+    zi, zf, zz, zo = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(logf + st["m"], zi)
+    i = jnp.exp(zi - m_new)
+    f = jnp.exp(logf + st["m"] - m_new)
+    z = jnp.tanh(zz)
+    o = jax.nn.sigmoid(zo)
+    c = f * st["c"] + i * z
+    n = f * st["n"] + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_apply(params, x, cfg, *, return_state=False, state=None):
+    """Sequential scan over time. x: (B, S, d)."""
+    B, S, d = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xs = (x.astype(cdt) @ params["w"].astype(cdt)).astype(jnp.float32)
+    st0 = state if state is not None else slstm_init_state(cfg, B)
+
+    def step(st, xt):
+        st = _slstm_cell(params, xt, st, cfg)
+        return st, st["h"]
+
+    st_final, hs = jax.lax.scan(step, st0, xs.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(cdt)                  # (B,S,d)
+    y = layernorm(params["norm"], y, cfg.norm_eps)
+    out = (y @ params["w_down"].astype(cdt)).astype(x.dtype)
+    if return_state:
+        return out, st_final
+    return out
+
+
+def slstm_decode(params, x, state, cfg):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xt = (x[:, 0].astype(cdt) @ params["w"].astype(cdt)).astype(jnp.float32)
+    st = _slstm_cell(params, xt, state, cfg)
+    y = layernorm(params["norm"], st["h"].astype(cdt)[:, None], cfg.norm_eps)
+    out = (y @ params["w_down"].astype(cdt)).astype(x.dtype)
+    return out, st

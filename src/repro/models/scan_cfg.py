@@ -1,0 +1,24 @@
+"""Global scan-unroll switch.
+
+XLA's HLO cost analysis counts a while-loop body ONCE, so a lax.scan over
+L layers under-reports FLOPs/bytes by ~L×. The dry-run therefore lowers
+with fully-unrolled layer scans (correct roofline terms, larger HLO); real
+training keeps scans rolled (small HLO, fast compile).
+
+The sequential time scan inside sLSTM is never unrolled (length = seq_len);
+its recurrence FLOPs are analytically small and noted in EXPERIMENTS.md.
+"""
+UNROLL = False
+# Chunk-level scans (SSD / mLSTM chunked cores) stay rolled even when layer
+# scans unroll: unrolling L layers x nc chunks x backward makes zamba-class
+# graphs intractable to compile. Their flops are re-added analytically
+# (repro.roofline.analysis.chunk_loop_correction).
+CHUNK_UNROLL = False
+
+
+def scan_unroll():
+    return True if UNROLL else 1
+
+
+def chunk_unroll():
+    return True if CHUNK_UNROLL else 1

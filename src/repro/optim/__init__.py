@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, make_optimizer, apply_updates, freeze_tree_mask)
+from repro.optim.schedules import learning_rate  # noqa: F401

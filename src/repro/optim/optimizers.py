@@ -1,0 +1,168 @@
+"""Optimizers (self-contained, optax-free): AdamW, Adafactor, SGD-momentum.
+
+All are expressed as ``init(params) -> state`` / ``update(grads, state,
+params, lr) -> (new_params, new_state)`` pairs over pytrees, jit- and
+pjit-friendly (states shard like their parameters).
+
+Freeze masking: layer-wise training must not update frozen layers. The
+forward pass already blocks gradients with ``stop_gradient`` (so frozen
+grads are exactly zero), but AdamW's weight decay and Adafactor's update
+rule would still move frozen weights — ``mask`` zeroes the whole update.
+
+Adafactor (Shazeer & Stern, 2018) keeps factored second-moment estimates
+(row/col means) for matrices — the optimizer-memory fit story for the
+123B/236B/400B assigned architectures on 256 chips.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]    # (grads, state, params, lr, mask=None)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _masked(updates, mask):
+    if mask is None:
+        return updates
+    return jax.tree.map(lambda u, m: u * m, updates, mask)
+
+
+def freeze_tree_mask(params, predicate):
+    """mask leaf = 0.0 where predicate(path) says frozen, else 1.0.
+
+    predicate receives the jax key-path tuple of each leaf.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, a: jnp.zeros((), a.dtype) if predicate(path)
+        else jnp.ones((), a.dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def make_adamw(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0, grad_clip=0.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)  # noqa: E731
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr, mask=None):
+        if grad_clip:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        c = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v, p: -lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                                   + weight_decay * p.astype(jnp.float32)),
+            mu, nu, params)
+        updates = _masked(updates, mask)
+        return apply_updates(params, updates), \
+            {"mu": mu, "nu": nu, "count": c}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no first moment)
+# ---------------------------------------------------------------------------
+def make_adafactor(eps=1e-30, clip_threshold=1.0, decay_rate=0.8,
+                   weight_decay=0.0, min_dim_size_to_factor=128):
+    def _factored(shape):
+        return len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor \
+            and shape[-2] >= min_dim_size_to_factor
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"m": jax.tree.map(leaf, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr, mask=None):
+        c = state["count"] + 1
+        beta = 1.0 - c.astype(jnp.float32) ** (-decay_rate)
+
+        def leaf(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in st:
+                vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                pre = (vr / denom)[..., None] * vc[..., None, :]
+                u = g * jax.lax.rsqrt(pre + eps)
+                new = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new = {"v": v}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            upd = -lr * (u + weight_decay * p.astype(jnp.float32))
+            return upd, new
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["m"])
+        flat_p = jax.tree.leaves(params)
+        outs = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        new_m = tdef.unflatten([o[1] for o in outs])
+        updates = _masked(updates, mask)
+        return apply_updates(params, updates), {"m": new_m, "count": c}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD with momentum (supervised FL baseline)
+# ---------------------------------------------------------------------------
+def make_sgdm(momentum=0.9, weight_decay=0.0):
+    def init(params):
+        return {"v": jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)}
+
+    def update(grads, state, params, lr, mask=None):
+        v = jax.tree.map(
+            lambda v, g, p: momentum * v + g.astype(jnp.float32)
+            + weight_decay * p.astype(jnp.float32),
+            state["v"], grads, params)
+        updates = _masked(jax.tree.map(lambda v: -lr * v, v), mask)
+        return apply_updates(params, updates), {"v": v}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(train_cfg) -> Optimizer:
+    if train_cfg.optimizer == "adamw":
+        return make_adamw(train_cfg.b1, train_cfg.b2, train_cfg.eps,
+                          train_cfg.weight_decay, train_cfg.grad_clip)
+    if train_cfg.optimizer == "adafactor":
+        return make_adafactor(weight_decay=train_cfg.weight_decay)
+    if train_cfg.optimizer == "sgdm":
+        return make_sgdm(weight_decay=train_cfg.weight_decay)
+    raise ValueError(train_cfg.optimizer)

@@ -1,0 +1,43 @@
+"""Learning-rate strategies (paper Section 5.9, Fig. 12).
+
+``cosine``  — one cosine decay over the whole FL process (paper default).
+``fixed``   — constant base LR (best for FedMoCo-LW per Fig. 8).
+``cyclic``  — cosine decay restarted within every layer-wise stage.
+
+The paper linearly scales: lr = base_lr * batch_size / 256.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scaled_base_lr(base_lr: float, batch_size: int) -> float:
+    return base_lr * batch_size / 256.0
+
+
+def learning_rate(step, total_steps: int, base_lr: float,
+                  schedule: str = "cosine", *, stage_step=None,
+                  stage_total: int = 0, warmup_steps: int = 0):
+    """step: global step (int or traced). Returns fp32 LR.
+
+    For ``cyclic``, ``stage_step``/``stage_total`` give the position within
+    the current layer-wise stage.
+    """
+    step = jnp.asarray(step, jnp.float32)
+    lr = jnp.float32(base_lr)
+    if schedule == "fixed":
+        out = lr
+    elif schedule == "cosine":
+        t = jnp.clip(step / jnp.maximum(1.0, float(total_steps)), 0.0, 1.0)
+        out = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    elif schedule == "cyclic":
+        ss = jnp.asarray(stage_step if stage_step is not None else step,
+                         jnp.float32)
+        t = jnp.clip(ss / jnp.maximum(1.0, float(stage_total or total_steps)),
+                     0.0, 1.0)
+        out = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    else:
+        raise ValueError(schedule)
+    if warmup_steps:
+        out = out * jnp.clip(step / float(warmup_steps), 0.0, 1.0)
+    return out

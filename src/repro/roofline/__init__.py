@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (  # noqa: F401
+    analyze_compiled, collective_bytes, model_flops, roofline_report)

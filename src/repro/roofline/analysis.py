@@ -1,0 +1,213 @@
+"""Three-term roofline analysis from a compiled XLA artifact.
+
+  compute term    = HLO_FLOPs_per_device   / peak_FLOP/s     (197 TF bf16)
+  memory term     = HLO_bytes_per_device   / HBM_bw          (819 GB/s)
+  collective term = collective_bytes_per_device / link_bw    (~50 GB/s)
+
+``compiled.cost_analysis()`` is evaluated on the SPMD-partitioned
+per-device module, so its flops/bytes are already per-device. Collective
+bytes are NOT in cost_analysis: we parse the optimized (post-partitioning)
+HLO text and sum the *result* shapes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (a standard first-order
+traffic estimate; ring-algorithm constants fold into the ~50 GB/s
+effective link bandwidth).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# e.g.  "  %ag = bf16[2,1024,128]{2,1,0} all-gather(...)"
+_SHAPE_RE = re.compile(
+    r"(?:\(|\s|^)(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
+    r"(" + "|".join(COLLECTIVE_OPS) + r")[-a-z]*\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum collective result bytes per op kind from optimized HLO text."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    count = {k: 0 for k in COLLECTIVE_OPS}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(shape_str)
+        count[op] += 1
+    return {"bytes": out, "counts": count,
+            "total": sum(out.values())}
+
+
+def model_flops(cfg, shape, mode: str) -> float:
+    """Useful-work floor: 6·N_active·D train, 2·N_active·D forward-only."""
+    n = cfg.active_param_count()
+    if mode in ("train", "train_lw"):
+        tokens = shape.global_batch * shape.seq_len
+        f = 6.0 * n * tokens
+        if mode == "train_lw":
+            # full forward + (1/S) backward + alignment forward (global model)
+            S = max(1, cfg.num_layers)
+            f = 2.0 * n * tokens * (1 + 1) + 4.0 * n * tokens / S
+        return f
+    if mode == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    if mode == "decode":
+        return 2.0 * n * shape.global_batch
+    raise ValueError(mode)
+
+
+def chunk_loop_correction(cfg, shape, mode: str, n_devices: int) -> float:
+    """Per-device FLOPs that rolled chunk/time loops hide from
+    cost_analysis (see repro.models.scan_cfg.CHUNK_UNROLL).
+
+    SSD intra-chunk terms per layer per sequence (fwd):
+        2*S*Q*N  (C·B)  +  2*S*Q*H*P  (mask·x)  +  4*S*N*H*P  (state I/O)
+    mLSTM chunked core:  4*S*Q*d_inner + 4*S*d_inner*P
+    sLSTM recurrence:    S * 8 * d * P_head
+    Train multiplies by 3 (fwd + 2x bwd); decode steps have no chunk loops.
+    """
+    if mode == "decode":
+        return 0.0
+    mult = 3.0 if mode in ("train", "train_lw") else 1.0
+    B, S = shape.global_batch, shape.seq_len
+    extra = 0.0
+    if cfg.ssm is not None and cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        Q = min(s.chunk_size, S)
+        d_in = s.expand * cfg.d_model
+        H = d_in // s.head_dim
+        N, P = s.state_dim, s.head_dim
+        per_seq = 2 * S * Q * N + 2 * S * Q * H * P + 4 * S * N * H * P
+        extra += cfg.num_layers * B * per_seq * mult
+    if cfg.xlstm is not None:
+        from repro.models.layers.xlstm import MLSTM_CHUNK
+        d_in = int(cfg.xlstm.proj_factor * cfg.d_model)
+        P = d_in // cfg.num_heads
+        Q = min(MLSTM_CHUNK, S)
+        per = cfg.xlstm.slstm_every or cfg.num_layers
+        n_mlstm = cfg.num_layers - cfg.num_layers // per
+        n_slstm = cfg.num_layers // per
+        extra += n_mlstm * B * (4 * S * Q * d_in + 4 * S * d_in * P) * mult
+        d = cfg.d_model
+        extra += n_slstm * B * S * 8 * d * (d // cfg.num_heads) * mult
+    return extra / n_devices
+
+
+@dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    mode: str
+    mesh: str
+    n_devices: int
+    flops_dev: float
+    bytes_dev: float
+    coll_bytes_dev: float
+    coll_detail: dict
+    mem_per_device: dict
+    model_flops_total: float
+
+    @property
+    def compute_s(self):
+        return self.flops_dev / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self):
+        return self.bytes_dev / HBM_BW
+
+    @property
+    def collective_s(self):
+        return self.coll_bytes_dev / ICI_BW
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self):
+        hlo_total = self.flops_dev * self.n_devices
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    def to_dict(self):
+        return {
+            "arch": self.arch, "shape": self.shape, "mode": self.mode,
+            "mesh": self.mesh, "n_devices": self.n_devices,
+            "flops_dev": self.flops_dev, "bytes_dev": self.bytes_dev,
+            "coll_bytes_dev": self.coll_bytes_dev,
+            "coll_detail": self.coll_detail,
+            "mem_per_device": self.mem_per_device,
+            "model_flops_total": self.model_flops_total,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def analyze_compiled(compiled, *, arch, shape, mode, mesh_name, n_devices,
+                     cfg, shape_cfg, cost_scale: float = 1.0
+                     ) -> RooflineResult:
+    """cost_scale corrects for rolled loops XLA counts once (the gradient-
+    accumulation scan: body = one full fwd+bwd, trip count = microbatch)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):      # older jax returns [dict]
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0) or (
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)),
+    }
+    coll = collective_bytes(compiled.as_text())
+    from repro.models import scan_cfg
+    extra = 0.0
+    if not scan_cfg.CHUNK_UNROLL and scan_cfg.UNROLL:
+        extra = chunk_loop_correction(cfg, shape_cfg, mode, n_devices)
+    return RooflineResult(
+        arch=arch, shape=shape, mode=mode, mesh=mesh_name,
+        n_devices=n_devices,
+        flops_dev=float(cost.get("flops", 0.0)) * cost_scale + extra,
+        bytes_dev=float(cost.get("bytes accessed", 0.0)) * cost_scale,
+        coll_bytes_dev=float(coll["total"]) * cost_scale,
+        coll_detail=coll,
+        mem_per_device=mem_d,
+        model_flops_total=model_flops(cfg, shape_cfg, mode),
+    )
+
+
+def roofline_report(res: RooflineResult) -> str:
+    t = res.to_dict()
+    return (
+        f"{res.arch:28s} {res.shape:12s} {res.mode:9s} {res.mesh:9s} "
+        f"comp {t['compute_s']*1e3:9.3f}ms  mem {t['memory_s']*1e3:9.3f}ms  "
+        f"coll {t['collective_s']*1e3:9.3f}ms  -> {t['dominant']:10s} "
+        f"useful {t['useful_ratio']*100:5.1f}%  "
+        f"args {t['mem_per_device']['argument_bytes']/2**30:6.2f}GiB "
+        f"peak {t['mem_per_device']['peak_bytes']/2**30:6.2f}GiB")

@@ -1,0 +1,2 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_specs, cache_pspecs, opt_state_specs, param_pspecs, tree_shardings)

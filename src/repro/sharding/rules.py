@@ -1,0 +1,244 @@
+"""Logical-axis sharding rules → PartitionSpec (MaxText-style).
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+  fsdp = ("pod", "data")   — parameter / batch sharding (ZeRO-3 style)
+  tp   = ("model",)        — tensor / expert parallel
+
+Every rule is a tuple of tokens for a leaf's *trailing* dims (leading
+stage-stack dims are replicated): token "fsdp" / "tp" / "all" / None.
+Tokens degrade gracefully: an axis is only used when the dim is evenly
+divisible by it (JAX rejects uneven named sharding), otherwise the next
+smaller axis group — or replication — is chosen. This keeps one rule table
+valid across all 10 assigned architectures (e.g. kv-head dims smaller than
+the model axis simply stay replicated).
+
+Weight-matrix orientation follows Megatron: column-parallel for
+d_model→wide projections ("fsdp", "tp"), row-parallel for wide→d_model
+("tp", "fsdp"); MoE expert stacks are expert-parallel on "model" with FSDP
+on d_model; KV caches shard batch over fsdp and sequence over "model"
+(context-parallel decode — for global_batch=1 long-context decode the
+sequence dim shards over *all* axes).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axes(mesh):
+    names = mesh.axis_names
+    fsdp = tuple(n for n in ("pod", "data") if n in names)
+    return fsdp, ("model",) if "model" in names else ()
+
+
+def _resolve(token, dim_size, mesh, used=()):
+    """Token -> mesh-axis entry for one dim, honoring divisibility and
+    skipping axes already used elsewhere in the same PartitionSpec."""
+    if token is None:
+        return None
+    fsdp, tp = _axes(mesh)
+    groups = {"fsdp": fsdp, "tp": tp, "all": fsdp + tp}[token]
+    groups = tuple(a for a in groups if a not in used)
+    # try the full group, then suffixes (drop the biggest axes first)
+    for i in range(len(groups)):
+        sub = groups[i:]
+        if not sub:
+            break
+        prod = int(np.prod([mesh.shape[a] for a in sub]))
+        if prod > 1 and dim_size % prod == 0:
+            return sub if len(sub) > 1 else sub[0]
+    return None
+
+
+def _spec_from_rule(rule, shape, mesh):
+    n_lead = len(shape) - len(rule)
+    entries = [None] * n_lead + [
+        _resolve(tok, shape[n_lead + i], mesh) for i, tok in enumerate(rule)]
+    return P(*entries)
+
+
+# rules keyed by leaf name (trailing-dims tokens)
+PARAM_RULES = {
+    # attention projections
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    # MLP (dense & shared experts & mLSTM up/down)
+    "w_up": ("fsdp", "tp"), "w_gate": ("fsdp", "tp"), "w_down": ("tp", "fsdp"),
+    # embeddings / output head
+    "embed": ("tp", "fsdp"), "lm_head": ("fsdp", "tp"),
+    # mamba2
+    "w_in": ("fsdp", "tp"), "w_out": ("tp", "fsdp"),
+    "conv_w": (None, "tp"), "conv_b": ("tp",),
+    "a_log": (None,), "dt_bias": (None,), "D": (None,),
+    # MLA
+    "w_dkv": ("fsdp", None), "w_kr": ("fsdp", None),
+    "w_dq": ("fsdp", None), "w_uq": (None, "tp"),
+    "w_uk": ("tp", None, None), "w_uv": ("tp", None, None),
+    "w_q": ("fsdp", "tp"),
+    # xLSTM (w_q shared with MLA; w_k/w_v are the (di, di) projections)
+    "w_k": ("fsdp", "tp"), "w_v": ("fsdp", "tp"),
+    "r": (None, "fsdp", "tp"), "w_i": ("fsdp", None), "w_f": ("fsdp", None),
+    "b_i": (None,), "b_f": (None,), "w": ("fsdp", "tp"), "b": (None,),
+    # MoE router
+    "router": ("fsdp", None),
+    # ViT stem
+    "patch": (None, "fsdp"), "pos": (None, None), "cls": (None, None, None),
+    # norms / biases
+    "scale": (None,), "bias": (None,),
+}
+
+# expert-stacked MoE weights (under a "moe" parent, excluding "shared")
+MOE_EXPERT_RULES = {
+    "w_gate": ("tp", "fsdp", None),
+    "w_up": ("tp", "fsdp", None),
+    "w_down": ("tp", None, "fsdp"),
+}
+
+
+def _path_keys(path):
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def param_pspec(path, leaf, mesh) -> P:
+    keys = _path_keys(path)
+    name = keys[-1]
+    if "moe" in keys and "shared" not in keys and name in MOE_EXPERT_RULES:
+        rule = MOE_EXPERT_RULES[name]
+    elif name in PARAM_RULES:
+        rule = PARAM_RULES[name]
+    else:
+        return P()          # replicate unknown leaves
+    if len(rule) > len(leaf.shape):
+        return P()
+    return _spec_from_rule(rule, leaf.shape, mesh)
+
+
+def param_pspecs(params, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, a: param_pspec(p, a, mesh), params)
+
+
+def tree_shardings(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# optimizer state: moments shard like their parameters
+# ---------------------------------------------------------------------------
+def opt_state_specs(opt_state_shapes, param_specs, optimizer: str, mesh):
+    """opt_state_shapes: eval_shape of opt.init(params)."""
+    if optimizer in ("adamw", "sgdm"):
+        def like(tree):
+            return jax.tree.map(lambda _, s: s, tree, param_specs)
+        out = {}
+        for k, v in opt_state_shapes.items():
+            if k == "count":
+                out[k] = P()
+            elif k in ("mu", "nu", "v"):
+                out[k] = like(v)
+            else:
+                out[k] = jax.tree.map(lambda _: P(), v)
+        return out
+    if optimizer == "adafactor":
+        flat_p, tdef = jax.tree.flatten(param_specs,
+                                        is_leaf=lambda x: isinstance(x, P))
+        flat_m = tdef.flatten_up_to(opt_state_shapes["m"])
+
+        def leaf(spec, st):
+            if "vr" in st:
+                ent = list(spec) + [None] * (len(st["vr"].shape) + 1
+                                             - len(spec))
+                return {"vr": P(*ent[:-1]),
+                        "vc": P(*(ent[:-2] + [ent[-1]]))}
+            return {"v": spec}
+
+        m = tdef.unflatten([leaf(s, st) for s, st in zip(flat_p, flat_m)])
+        return {"m": m, "count": P()}
+    raise ValueError(optimizer)
+
+
+# ---------------------------------------------------------------------------
+# serving caches / recurrent states
+# ---------------------------------------------------------------------------
+CACHE_BATCH_POS = {   # name -> batch dim position from the END of the shape
+    "k": 4, "v": 4,                 # (..., B, W, Hkv, hd)
+    "c_kv": 3, "k_rope": 3,         # (..., B, W, rank)
+    "h": 4,                         # (..., B, H, P, N)
+    "conv": 3,                      # (..., B, K-1, C)
+    "C": 4,                         # (..., B, H, P, P)   mLSTM matrix memory
+    "n": 3,                         # (..., B, H, P)
+    "m": 2,                         # (..., B, H)
+    "c": 2,                         # (..., B, d)         sLSTM
+}
+# per-name rule for the dims after the batch dim
+CACHE_TAIL_RULES = {
+    "k": ("seq", "tp", None), "v": ("seq", "tp", None),
+    "c_kv": ("seq", None), "k_rope": ("seq", None),
+    "h": ("tp", None, None), "conv": (None, "tp"),
+    "C": (None, "tp", None), "n": (None, "tp"), "m": (None,),
+    "c": ("tp",),
+}
+
+
+def cache_pspec(path, leaf, mesh, batch: int):
+    keys = _path_keys(path)
+    name = keys[-1]
+    if name == "pos":
+        return P()
+    if "slstm" in keys:
+        # sLSTM state leaves are all (..., B, d) regardless of name
+        bpos, tail = len(leaf.shape) - 2, ("tp",)
+    elif name in CACHE_BATCH_POS:
+        bpos = len(leaf.shape) - CACHE_BATCH_POS[name]
+        tail = CACHE_TAIL_RULES[name]
+    else:
+        return P()
+    fsdp, _ = _axes(mesh)
+    fsdp_size = int(np.prod([mesh.shape[a] for a in fsdp])) if fsdp else 1
+    batch_shardable = fsdp_size > 1 and batch % fsdp_size == 0
+    entries = [None] * len(leaf.shape)
+    used = set()
+
+    def mark(entry):
+        if entry is None:
+            return entry
+        for a in (entry if isinstance(entry, tuple) else (entry,)):
+            used.add(a)
+        return entry
+
+    if batch_shardable:
+        entries[bpos] = mark(fsdp if len(fsdp) > 1 else fsdp[0])
+    for i, tok in enumerate(tail):
+        dim = bpos + 1 + i
+        if dim >= len(leaf.shape) or tok is None:
+            continue
+        if tok == "seq":
+            # context parallel: over "model"; over everything when the
+            # batch could not be sharded (global_batch=1 long decode)
+            tok2 = "tp" if batch_shardable else "all"
+            entries[dim] = mark(_resolve(tok2, leaf.shape[dim], mesh,
+                                         used=tuple(used)))
+        else:
+            entries[dim] = mark(_resolve(tok, leaf.shape[dim], mesh,
+                                         used=tuple(used)))
+    return P(*entries)
+
+
+def cache_pspecs(caches, mesh, batch: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, a: cache_pspec(p, a, mesh, batch), caches)
+
+
+# ---------------------------------------------------------------------------
+# batch inputs
+# ---------------------------------------------------------------------------
+def batch_specs(batch_tree, mesh):
+    """Shard dim 0 (global batch) over fsdp axes when divisible."""
+    def leaf(a):
+        if a.ndim == 0:
+            return P()
+        ent = _resolve("fsdp", a.shape[0], mesh)
+        return P(*([ent] + [None] * (a.ndim - 1)))
+    return jax.tree.map(leaf, batch_tree)

@@ -1,0 +1,36 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the dry-run, and only the
+# dry-run, forces 512 host devices in its own process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+class FakeMesh:
+    """Duck-typed mesh for sharding-rule unit tests (no devices needed)."""
+
+    def __init__(self, shape_by_axis):
+        self.axis_names = tuple(shape_by_axis)
+        self.shape = dict(shape_by_axis)
+
+
+@pytest.fixture
+def mesh16x16():
+    return FakeMesh({"data": 16, "model": 16})
+
+
+@pytest.fixture
+def mesh2x16x16():
+    return FakeMesh({"pod": 2, "data": 16, "model": 16})

@@ -1,0 +1,123 @@
+"""Federated runtime invariants: FedAvg, comm accounting, partitioners."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core import schedule as sched
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.federated import aggregate, comm
+from repro.models import lm as lm_mod
+
+
+@given(n=st.integers(2, 6), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_fedavg_weighted_mean(n, seed):
+    key = jax.random.PRNGKey(seed)
+    trees = []
+    for i in range(n):
+        key, k = jax.random.split(key)
+        trees.append({"a": jax.random.normal(k, (3, 4)),
+                      "b": {"c": jax.random.normal(k, (2,))}})
+    counts = np.arange(1, n + 1)
+    w = aggregate.client_weights(counts)
+    out = aggregate.fedavg(trees, w)
+    want = sum(float(w[i]) * np.asarray(trees[i]["a"]) for i in range(n))
+    assert np.allclose(np.asarray(out["a"]), want, atol=1e-5)
+
+
+def test_fedavg_identity():
+    t = {"x": jnp.ones((4,))}
+    out = aggregate.fedavg([t, t, t], aggregate.client_weights([1, 1, 1]))
+    assert jnp.allclose(out["x"], 1.0)
+
+
+def test_comm_accounting_matches_schedule(rng):
+    """LW-FedSSL: download grows with stage, upload constant (paper Fig 5)."""
+    cfg = ModelConfig("t", "dense", 6, 32, 2, 2, 64, 50,
+                      compute_dtype="float32")
+    params = lm_mod.init_lm(rng, cfg)
+    fl = FLConfig(rounds=12, schedule="lw_fedssl")
+    plans = sched.build_schedule(fl, 6)
+    downs, ups = [], []
+    for p in plans:
+        cb = comm.round_comm_bytes(params, p, include_heads=False)
+        downs.append(cb["download"])
+        ups.append(cb["upload"])
+    stage_of = [p.stage for p in plans]
+    # downloads non-decreasing with stage; strictly more at later stage
+    for i in range(1, len(plans)):
+        if stage_of[i] > stage_of[i - 1]:
+            assert downs[i] > downs[i - 1]
+    # upload = one block, constant across stages
+    assert len(set(ups[2:])) == 1          # stage>=2: exactly one block
+    # e2e exchanges the whole encoder every round
+    e2e = sched.build_schedule(FLConfig(rounds=2, schedule="e2e"), 6)[0]
+    cb = comm.round_comm_bytes(params, e2e, include_heads=False)
+    assert cb["download"] >= downs[-1]
+    assert cb["upload"] > ups[-1]
+
+
+def test_comm_progressive_upload_grows(rng):
+    cfg = ModelConfig("t", "dense", 4, 32, 2, 2, 64, 50,
+                      compute_dtype="float32")
+    params = lm_mod.init_lm(rng, cfg)
+    plans = sched.build_schedule(
+        FLConfig(rounds=8, schedule="progressive"), 4)
+    ups = [comm.round_comm_bytes(params, p)["upload"] for p in plans]
+    stages = [p.stage for p in plans]
+    for i in range(1, len(plans)):
+        if stages[i] > stages[i - 1]:
+            assert ups[i] > ups[i - 1]
+
+
+def test_tree_bytes(rng):
+    t = {"a": jnp.zeros((10, 10), jnp.float32),
+         "b": jnp.zeros((5,), jnp.int32)}
+    assert comm.tree_bytes(t) == 400 + 20
+
+
+@given(n_clients=st.integers(2, 10), n=st.integers(100, 500),
+       seed=st.integers(0, 20))
+@settings(max_examples=20, deadline=None)
+def test_iid_partition_covers_everything(n_clients, n, seed):
+    parts = iid_partition(n, n_clients, seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n
+
+
+@given(beta=st.sampled_from([0.1, 0.5, 5.0]), seed=st.integers(0, 10))
+@settings(max_examples=15, deadline=None)
+def test_dirichlet_partition_properties(beta, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 400)
+    parts = dirichlet_partition(labels, 5, beta, seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 400 and len(np.unique(allidx)) == 400
+    assert all(len(p) >= 1 for p in parts)
+
+
+def test_dirichlet_lower_beta_more_skewed():
+    labels = np.random.default_rng(0).integers(0, 10, 2000)
+
+    def skew(beta):
+        parts = dirichlet_partition(labels, 5, beta, seed=1)
+        # mean per-client label-distribution entropy (lower = more skew)
+        ents = []
+        for p in parts:
+            h = np.bincount(labels[p], minlength=10) / len(p)
+            ents.append(-np.sum(h[h > 0] * np.log(h[h > 0])))
+        return np.mean(ents)
+
+    assert skew(0.05) < skew(100.0)
+
+
+def test_client_sampling_subset(rng):
+    from repro.federated.server import sample_clients
+    sel = sample_clients(rng, 45, 5)
+    assert len(sel) == 5 and len(set(sel)) == 5
+    assert all(0 <= i < 45 for i in sel)
+    assert sample_clients(rng, 10, 0) == list(range(10))

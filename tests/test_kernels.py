@@ -1,0 +1,92 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.losses import info_nce
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("B,S,T,Hq,Hkv,hd,causal,window,dtype", [
+    (2, 128, 128, 4, 2, 64, True, 0, jnp.float32),
+    (1, 256, 256, 4, 4, 128, True, 0, jnp.float32),
+    (2, 128, 128, 8, 1, 64, False, 0, jnp.float32),
+    (1, 200, 200, 4, 2, 48, True, 0, jnp.float32),   # unaligned (padding)
+    (1, 384, 384, 2, 2, 96, True, 64, jnp.float32),  # sliding window
+    (1, 256, 256, 4, 2, 64, True, 0, jnp.bfloat16),
+    (1, 128, 128, 4, 4, 64, False, 0, jnp.bfloat16),
+])
+def test_flash_attention(B, S, T, Hq, Hkv, hd, causal, window, dtype, rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (B, S, Hq, hd), dtype)
+    k = jax.random.normal(k2, (B, T, Hkv, hd), dtype)
+    v = jax.random.normal(k3, (B, T, Hkv, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=True)
+    want = ref.sdpa_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal,
+                        window=window).transpose(0, 2, 1, 3)
+    assert out.shape == want.shape and out.dtype == q.dtype
+    err = jnp.max(jnp.abs(out.astype(jnp.float32)
+                          - want.astype(jnp.float32)))
+    assert err < _tol(dtype), float(err)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 256, 4, 64, 64, 128),
+    (1, 128, 2, 32, 16, 64),
+    (1, 512, 8, 64, 64, 128),
+])
+def test_ssd_scan(B, S, H, P, N, chunk, rng):
+    k = jax.random.split(rng, 5)
+    xh = jax.random.normal(k[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(k[1], (B, S, H)))
+    a = -dt * jnp.exp(jax.random.normal(k[2], (H,))) * 0.1
+    Bm = jax.random.normal(k[3], (B, S, N))
+    Cm = jax.random.normal(k[4], (B, S, N))
+    out = ops.ssd_scan(xh, dt, a, Bm, Cm, chunk=chunk, interpret=True)
+    want = ref.ssd_scan_ref(xh, dt, a, Bm, Cm, chunk=chunk)
+    assert jnp.max(jnp.abs(out - want)) < 5e-3
+
+
+def test_ssd_scan_matches_model_layer(rng):
+    """Kernel agrees with the Mamba2 layer's internal chunked scan."""
+    from repro.models.layers.mamba2 import ssd_chunked
+    B, S, H, P, N = 2, 256, 4, 32, 16
+    k = jax.random.split(rng, 5)
+    xh = jax.random.normal(k[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(k[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(k[2], (H,))) * 0.1
+    Bm = jax.random.normal(k[3], (B, S, N))
+    Cm = jax.random.normal(k[4], (B, S, N))
+    want, _ = ssd_chunked(xh, dt, A, Bm, Cm, 128)
+    got = ops.ssd_scan(xh, dt, dt * A, Bm, Cm, chunk=128, interpret=True)
+    assert jnp.max(jnp.abs(got - want)) < 5e-3
+
+
+@pytest.mark.parametrize("B,d", [(128, 64), (256, 128), (384, 96)])
+@pytest.mark.parametrize("tau", [0.2, 1.0])
+def test_fused_info_nce(B, d, tau, rng):
+    k1, k2 = jax.random.split(rng)
+    q = jax.random.normal(k1, (B, d))
+    k = jax.random.normal(k2, (B, d))
+    got = ops.fused_info_nce(q, k, tau, interpret=True)
+    want = info_nce(q, k, tau)
+    assert abs(float(got) - float(want)) < 1e-4
+
+
+@pytest.mark.parametrize("shape", [(256, 128), (4, 96, 256), (2, 3, 64, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_rmsnorm(shape, dtype, rng):
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, shape, dtype)
+    s = 1.0 + 0.1 * jax.random.normal(k2, (shape[-1],))
+    got = ops.fused_rmsnorm(x, s, interpret=True)
+    want = ref.rmsnorm_ref(x.reshape(-1, shape[-1]), s).reshape(shape)
+    err = jnp.max(jnp.abs(got.astype(jnp.float32)
+                          - want.astype(jnp.float32)))
+    assert err < _tol(dtype)

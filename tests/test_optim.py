@@ -1,0 +1,125 @@
+"""Optimizers + LR schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import TrainConfig
+from repro.optim import make_optimizer
+from repro.optim.optimizers import make_adafactor, make_adamw, make_sgdm
+from repro.optim.schedules import learning_rate, scaled_base_lr
+
+
+def test_adamw_first_step_direction(rng):
+    opt = make_adamw(weight_decay=0.0)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 2.0)}
+    st_ = opt.init(p)
+    p2, _ = opt.update(g, st_, p, 0.1)
+    # first Adam step ~= -lr * sign(g)
+    assert np.allclose(np.asarray(p2["w"]), 1.0 - 0.1, atol=1e-3)
+
+
+def test_adamw_weight_decay_moves_params():
+    opt = make_adamw(weight_decay=0.1)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.zeros((4,))}
+    st_ = opt.init(p)
+    p2, _ = opt.update(g, st_, p, 0.1)
+    assert float(p2["w"][0]) < 1.0
+
+
+def test_mask_freezes_updates():
+    opt = make_adamw(weight_decay=0.1)
+    p = {"w": jnp.ones((4,)), "f": jnp.ones((4,))}
+    g = {"w": jnp.ones((4,)), "f": jnp.ones((4,))}
+    mask = {"w": jnp.float32(1.0), "f": jnp.float32(0.0)}
+    st_ = opt.init(p)
+    p2, _ = opt.update(g, st_, p, 0.1, mask)
+    assert jnp.allclose(p2["f"], 1.0)           # frozen untouched
+    assert not jnp.allclose(p2["w"], 1.0)
+
+
+def test_grad_clip_limits_step():
+    opt = make_adamw(grad_clip=1e-3)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 1e6)}
+    st_ = opt.init(p)
+    p2, _ = opt.update(g, st_, p, 1e-3)
+    assert jnp.all(jnp.isfinite(p2["w"]))
+
+
+def test_adafactor_factored_state_shapes():
+    opt = make_adafactor()
+    p = {"big": jnp.ones((256, 512)), "small": jnp.ones((4,))}
+    st_ = opt.init(p)
+    assert st_["m"]["big"]["vr"].shape == (256,)
+    assert st_["m"]["big"]["vc"].shape == (512,)
+    assert st_["m"]["small"]["v"].shape == (4,)
+    g = jax.tree.map(jnp.ones_like, p)
+    p2, st2 = opt.update(g, st_, p, 0.01)
+    assert all(jnp.isfinite(x).all() for x in jax.tree.leaves(p2))
+
+
+def test_adafactor_reduces_loss(rng):
+    opt = make_adafactor()
+    w_true = jax.random.normal(rng, (16, 1))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    y = x @ w_true
+    p = {"w": jnp.zeros((16, 1))}
+    st_ = opt.init(p)
+
+    def loss(p):
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    l0 = float(loss(p))
+    for _ in range(50):
+        g = jax.grad(loss)(p)
+        p, st_ = opt.update(g, st_, p, 0.1)
+    assert float(loss(p)) < 0.5 * l0
+
+
+def test_sgdm(rng):
+    opt = make_sgdm(momentum=0.9)
+    p = {"w": jnp.ones((4,))}
+    st_ = opt.init(p)
+    p2, st2 = opt.update({"w": jnp.ones((4,))}, st_, p, 0.1)
+    assert jnp.allclose(p2["w"], 0.9)
+
+
+def test_make_optimizer_dispatch():
+    for name in ("adamw", "adafactor", "sgdm"):
+        make_optimizer(TrainConfig(optimizer=name))
+    with pytest.raises(ValueError):
+        make_optimizer(TrainConfig(optimizer="nope"))
+
+
+@given(total=st.integers(10, 500), base=st.floats(1e-5, 1e-2))
+@settings(max_examples=20, deadline=None)
+def test_cosine_decays_to_zero(total, base):
+    assert float(learning_rate(0, total, base, "cosine")) == pytest.approx(
+        base, rel=1e-5)
+    assert float(learning_rate(total, total, base, "cosine")) < 1e-6
+    mid = float(learning_rate(total // 2, total, base, "cosine"))
+    assert 0 < mid < base
+
+
+def test_fixed_and_cyclic():
+    assert float(learning_rate(7, 10, 1e-3, "fixed")) == pytest.approx(1e-3)
+    # cyclic restarts at each stage
+    early = float(learning_rate(100, 180, 1e-3, "cyclic",
+                                stage_step=0, stage_total=15))
+    late = float(learning_rate(100, 180, 1e-3, "cyclic",
+                               stage_step=14, stage_total=15))
+    assert early == pytest.approx(1e-3, rel=1e-4)
+    assert late < early
+
+
+def test_lr_scaling_rule():
+    assert scaled_base_lr(1.5e-4, 1024) == pytest.approx(6e-4)
+
+
+def test_warmup():
+    lr = learning_rate(5, 100, 1e-3, "fixed", warmup_steps=10)
+    assert float(lr) == pytest.approx(5e-4)

@@ -1,0 +1,98 @@
+"""Stage-schedule properties (hypothesis) + weight transfer + masks."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core import schedule as sched
+from repro.federated.masks import stage_update_mask
+
+
+@given(rounds=st.integers(24, 400), S=st.integers(1, 24),
+       alloc=st.sampled_from(["uniform", "left_skewed", "right_skewed"]))
+@settings(max_examples=60, deadline=None)
+def test_stage_rounds_partition(rounds, S, alloc):
+    rs = sched.stage_rounds(rounds, S, alloc)
+    assert len(rs) == S
+    assert sum(rs) == rounds
+    assert all(r >= 1 for r in rs)
+
+
+@given(rounds=st.integers(12, 200), S=st.integers(2, 16))
+@settings(max_examples=30, deadline=None)
+def test_skew_direction(rounds, S):
+    left = sched.stage_rounds(rounds, S, "left_skewed")
+    right = sched.stage_rounds(rounds, S, "right_skewed")
+    assert left[-1] >= left[0]          # more rounds late
+    assert right[0] >= right[-1]        # more rounds early
+
+
+@given(schedule=st.sampled_from(sched.SCHEDULES),
+       rounds=st.integers(12, 120), S=st.integers(1, 12))
+@settings(max_examples=60, deadline=None)
+def test_schedule_invariants(schedule, rounds, S):
+    fl = FLConfig(rounds=rounds, schedule=schedule, depth_dropout=0.5)
+    plans = sched.build_schedule(fl, S)
+    assert len(plans) == rounds
+    assert [p.round_idx for p in plans] == list(range(rounds))
+    stages = [p.stage for p in plans]
+    assert stages == sorted(stages)                 # monotone stages
+    for p in plans:
+        assert 1 <= p.stage <= S
+        assert p.sub_layers == (S if schedule == "e2e" else p.stage)
+        lo, hi = p.upload_stages
+        assert 0 <= lo < hi <= p.sub_layers
+        lo, hi = p.download_stages
+        assert 0 <= lo < hi <= p.sub_layers
+        if schedule == "e2e":
+            assert p.active_from == 0
+        elif schedule == "progressive":
+            assert p.active_from == 0
+        else:
+            assert p.active_from == p.stage - 1
+        assert p.server_calibrate == (schedule == "lw_fedssl")
+        assert p.align == (schedule == "lw_fedssl")
+        assert (p.depth_dropout > 0) == (schedule == "fll_dd")
+    if schedule != "e2e":
+        # every stage appears and each stage's first round is flagged new
+        assert set(stages) == set(range(1, S + 1))
+        firsts = {p.stage for p in plans if p.new_stage}
+        assert firsts == set(range(1, S + 1))
+
+
+def test_weight_transfer_copies_previous_block(rng):
+    stacked = {"w": jax.random.normal(rng, (4, 3, 3))}
+    out = sched.weight_transfer(stacked, stage=3)
+    assert jnp.allclose(out["w"][2], stacked["w"][1])
+    assert jnp.allclose(out["w"][0], stacked["w"][0])   # others untouched
+    assert jnp.allclose(out["w"][3], stacked["w"][3])
+    # stage 1: no-op
+    out1 = sched.weight_transfer(stacked, stage=1)
+    assert jnp.allclose(out1["w"], stacked["w"])
+
+
+def test_depth_dropout_gates_never_drop_active(rng):
+    for _ in range(10):
+        rng, k = jax.random.split(rng)
+        g = sched.depth_dropout_gates(k, 8, 5, rate=1.0)
+        assert jnp.all(g[5:] == 1.0)    # active & future stages kept
+        assert jnp.all(g[:5] == 0.0)    # frozen all dropped at rate 1
+
+
+def test_stage_update_mask_blocks(rng):
+    from repro.models import lm as lm_mod
+    cfg = ModelConfig("t", "dense", 4, 32, 2, 2, 64, 50,
+                      compute_dtype="float32")
+    params = lm_mod.init_lm(rng, cfg)
+    mask = stage_update_mask(params, sub_layers=3, active_from=2)
+    m = mask["blocks"]["attn"]["wq"]
+    assert m.shape[0] == 4
+    assert jnp.squeeze(m[2]) == 1.0     # active stage
+    assert jnp.squeeze(m[1]) == 0.0     # frozen
+    assert jnp.squeeze(m[3]) == 0.0     # not yet built
+    # embed frozen when prefix frozen, heads always active
+    assert float(mask["embed"]) == 0.0
+    assert float(mask["final_ln"]["scale"]) == 1.0
+    mask0 = stage_update_mask(params, sub_layers=1, active_from=0)
+    assert float(mask0["embed"]) == 1.0

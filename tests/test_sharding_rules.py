@@ -1,0 +1,141 @@
+"""Sharding rules: divisibility-safe PartitionSpecs for every arch."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, load_arch, reduced
+from repro.launch.steps import is_encdec
+from repro.sharding import rules
+
+
+def _abstract_params(cfg):
+    from repro.models import encdec as encdec_mod
+    from repro.models import lm as lm_mod
+    if is_encdec(cfg):
+        return jax.eval_shape(
+            lambda: encdec_mod.init_encdec(jax.random.PRNGKey(0), cfg))
+    return jax.eval_shape(lambda: lm_mod.init_lm(jax.random.PRNGKey(0), cfg))
+
+
+def _check_divisible(shapes, specs, mesh):
+    for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(shapes)[0],
+            jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[dim] % n == 0, (path, leaf.shape, spec)
+
+
+ASSIGNED = [a for a in ARCH_IDS if a != "vit-tiny"]
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_param_specs_divisible(arch, mesh16x16, mesh2x16x16):
+    cfg = load_arch(arch)
+    shapes = _abstract_params(cfg)
+    for mesh in (mesh16x16, mesh2x16x16):
+        specs = rules.param_pspecs(shapes, mesh)
+        _check_divisible(shapes, specs, mesh)
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "deepseek-v2-236b",
+                                  "zamba2-2.7b", "xlstm-125m"])
+def test_big_weights_actually_sharded(arch, mesh16x16):
+    """The large 2D weights must not silently fall back to replication."""
+    cfg = load_arch(arch)
+    shapes = _abstract_params(cfg)
+    specs = rules.param_pspecs(shapes, mesh16x16)
+    flat = {tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                  for p in path): (leaf, spec)
+            for (path, leaf), (_, spec) in zip(
+                jax.tree_util.tree_flatten_with_path(shapes)[0],
+                jax.tree_util.tree_flatten_with_path(
+                    specs, is_leaf=lambda x: isinstance(x, P))[0])}
+    n_sharded = sum(
+        1 for leaf, spec in flat.values()
+        if any(e is not None for e in spec) and np.prod(leaf.shape) > 1e6)
+    n_big = sum(1 for leaf, _ in flat.values() if np.prod(leaf.shape) > 1e6)
+    assert n_sharded == n_big, f"{arch}: {n_big - n_sharded} big replicated"
+
+
+@pytest.mark.parametrize("arch", ["internlm2-20b", "deepseek-v2-236b",
+                                  "zamba2-2.7b"])
+@pytest.mark.parametrize("batch", [128, 1])
+def test_cache_specs_divisible(arch, batch, mesh16x16):
+    from repro.models import lm as lm_mod
+    cfg = load_arch(arch)
+    shapes = jax.eval_shape(lambda: lm_mod.init_caches(cfg, batch, 32768))
+    specs = rules.cache_pspecs(shapes, mesh16x16, batch)
+    _check_divisible(shapes, specs, mesh16x16)
+
+
+def test_batch1_cache_context_parallel(mesh16x16):
+    """global_batch=1 long decode: seq dim shards over ALL axes."""
+    from repro.models import lm as lm_mod
+    cfg = load_arch("internlm2-20b")
+    shapes = jax.eval_shape(lambda: lm_mod.init_caches(cfg, 1, 524288))
+    specs = rules.cache_pspecs(shapes, mesh16x16, 1)
+    kspec = specs["k"]
+    # (L, B, W, H, hd): W entry uses both axes
+    w_entry = kspec[2]
+    assert w_entry == ("data", "model"), kspec
+
+
+def test_batch_specs(mesh16x16):
+    import jax.numpy as jnp
+    b = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+         "odd": jax.ShapeDtypeStruct((7, 3), jnp.float32)}
+    specs = rules.batch_specs(b, mesh16x16)
+    assert specs["tokens"][0] == "data"
+    assert specs["odd"][0] is None      # 7 not divisible -> replicate
+
+
+def test_moe_expert_parallel(mesh16x16):
+    # llama4 interleaves MoE blocks: expert stacks live under "moe_blocks"
+    cfg = load_arch("llama4-maverick-400b-a17b")
+    shapes = _abstract_params(cfg)
+    specs = rules.param_pspecs(shapes, mesh16x16)
+    wg = specs["moe_blocks"]["moe"]["w_gate"]
+    # (G, E, d, ff): experts over model, d over data
+    assert wg[1] == "model" and wg[2] == "data"
+    # deepseek is all-MoE (uniform): experts under "blocks"
+    cfg2 = load_arch("deepseek-v2-236b")
+    specs2 = rules.param_pspecs(_abstract_params(cfg2), mesh16x16)
+    wg2 = specs2["blocks"]["moe"]["w_gate"]
+    assert wg2[1] == "model" and wg2[2] == "data"
+
+
+def test_slstm_cache_spec_batch_axis(mesh2x16x16):
+    """Regression: sLSTM state leaves are (..., B, d); 'n'/'m' must not be
+    mistaken for the mLSTM leaves of the same name."""
+    from repro.models import lm as lm_mod
+    cfg = load_arch("xlstm-125m")
+    shapes = jax.eval_shape(lambda: lm_mod.init_caches(cfg, 128, 32768))
+    specs = rules.cache_pspecs(shapes, mesh2x16x16, 128)
+    _check_divisible(shapes, specs, mesh2x16x16)
+    c = specs["slstm"]["c"]          # (G, B, d)
+    assert c[1] == ("pod", "data") and c[0] is None
+
+
+def test_no_duplicate_axis_in_cache_spec(mesh16x16, mesh2x16x16):
+    """Regression: seq and head dims must not both claim 'model'."""
+    from repro.models import encdec as encdec_mod
+    cfg = load_arch("seamless-m4t-medium")
+    for mesh, batch in ((mesh16x16, 128), (mesh2x16x16, 128),
+                        (mesh16x16, 1)):
+        shapes = jax.eval_shape(
+            lambda: encdec_mod.init_dec_caches(cfg, batch, 32768))
+        specs = rules.cache_pspecs(shapes, mesh, batch)
+        for _, spec in jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]:
+            flat = []
+            for e in spec:
+                if e is None:
+                    continue
+                flat += list(e) if isinstance(e, tuple) else [e]
+            assert len(flat) == len(set(flat)), spec
