@@ -202,6 +202,49 @@ def bench_roofline():
                   f"{r['useful_ratio'] * 100:5.1f}%")
 
 
+def bench_engine(rounds=8, clients=8):
+    """Sequential vs vmap engine throughput, 8 clients/round.
+
+    Uses the regime the vectorized engine exists for — many clients with
+    small local datasets (one local step each, as in FedSGD-style rounds) —
+    where the sequential simulator's per-client dispatch overhead dominates
+    wall-clock. Steady-state rounds/sec excludes round 1, which pays the
+    one-time XLA compile in both engines.
+    """
+    print(f"\n== Engine: sequential vs vmap rounds/sec "
+          f"({clients} clients/round) ==")
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import (FLConfig, ModelConfig, SSLConfig,
+                                    TrainConfig)
+    from repro.data import iid_partition, synthetic_images
+    from repro.federated.driver import run_fedssl
+    cfg = ModelConfig("t-vit", "dense", 2, 32, 2, 2, 64, 0, causal=False,
+                      compute_dtype="float32", act="gelu")
+    sslc = SSLConfig(proj_hidden=32, pred_hidden=32, proj_dim=16)
+    tc = TrainConfig(batch_size=8, base_lr=1.5e-4)
+    samples = clients * tc.batch_size
+    key = jax.random.PRNGKey(0)
+    imgs, _ = synthetic_images(key, samples, 10, 32)
+    idx = [jnp.asarray(i) for i in iid_partition(samples, clients)]
+    fl = FLConfig(num_clients=clients, rounds=rounds, local_epochs=1,
+                  schedule="e2e")
+    rps = {}
+    for engine in ("sequential", "vmap"):
+        times = [time.time()]
+        _, hist = run_fedssl(cfg, sslc, fl, tc, images=imgs,
+                             client_indices=idx, key=key, engine=engine,
+                             log=lambda m: times.append(time.time()))
+        total = times[-1] - times[0]
+        rps[engine] = (rounds - 1) / (times[-1] - times[1])
+        print(f"{engine:12s} {total:6.1f}s total (incl. compile)  "
+              f"steady-state {rps[engine]:6.2f} rounds/s  "
+              f"final loss {hist.loss[-1]:.4f}")
+    print(f"vmap speedup over sequential: "
+          f"{rps['vmap'] / rps['sequential']:.2f}x rounds/sec")
+    return rps
+
+
 def bench_table4(rounds=4):
     print("\n== Table 4: auxiliary data amount (reduced-scale, "
           "synthetic) ==")
@@ -239,6 +282,7 @@ BENCHES = {
     "table1": bench_table1, "table2": bench_table2, "table3": bench_table3,
     "fig5": bench_fig5, "fig6": bench_fig6, "fig14": bench_fig14,
     "kernels": bench_kernels, "roofline": bench_roofline,
+    "engine": bench_engine,
 }
 FULL_BENCHES = {"table4": bench_table4}
 

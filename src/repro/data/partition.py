@@ -3,9 +3,16 @@
 Dirichlet: for each class c, draw p ~ Dir(beta * 1_N) and split that class's
 samples across the N clients proportionally (Hsu et al.). Lower beta =>
 stronger heterogeneity (Fig. A.16).
+
+``stack_shards`` turns a list of ragged per-client index shards into one
+client-stacked array (leading axis = client) for the vectorized engine
+(``repro.federated.engine``): shards shorter than the longest one are padded
+by wrapping around their own indices, and the true shard lengths are
+returned so callers can mask out padded positions.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -34,3 +41,28 @@ def dirichlet_partition(labels, n_clients: int, beta: float, seed: int = 0,
             j = int(np.argmax([len(s) for s in shards]))
             shards[i].append(shards[j].pop())
     return [np.sort(np.array(s, dtype=np.int64)) for s in shards]
+
+
+def stack_shards(pool, client_indices):
+    """Stack per-client shards of ``pool`` on a leading client axis.
+
+    pool: array or pytree of arrays with a shared leading sample axis;
+    client_indices: list of N per-client index arrays (ragged). Returns
+    ``(stacked, lengths)`` where every leaf of ``stacked`` has shape
+    ``(N, n_max, ...)`` and ``lengths`` is the ``(N,)`` array of true shard
+    sizes. Ragged shards are padded with wrapped-around copies of their own
+    samples, so padded rows are always valid data — the engine's step
+    validity mask (not the padding value) is what preserves training
+    semantics.
+    """
+    import jax
+
+    lengths = np.asarray([len(ix) for ix in client_indices], np.int64)
+    if lengths.min() < 1:
+        raise ValueError("every client shard must be non-empty")
+    n_max = int(lengths.max())
+    padded = np.stack([
+        np.pad(np.asarray(ix, np.int64), (0, n_max - len(ix)), mode="wrap")
+        for ix in client_indices])
+    idx = jnp.asarray(padded)
+    return jax.tree.map(lambda a: a[idx], pool), lengths

@@ -28,6 +28,20 @@ def fedavg(client_trees, weights):
     return jax.tree.map(avg, *client_trees)
 
 
+def fedavg_stacked(stacked, weights):
+    """FedAvg over client-stacked pytrees (leading axis = client).
+
+    Same weighted mean as ``fedavg`` but over one stacked tree instead of a
+    list — the form the vectorized engine produces, so aggregation fuses
+    into the round's single compiled program.
+    """
+    def avg(a):
+        w = weights.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.sum(a.astype(jnp.float32) * w, axis=0).astype(a.dtype)
+
+    return jax.tree.map(avg, stacked)
+
+
 def client_weights(sample_counts):
     w = jnp.asarray(sample_counts, jnp.float32)
     return w / jnp.sum(w)

@@ -13,6 +13,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import schedule as sched
 from repro.core import ssl as ssl_mod
@@ -85,3 +86,54 @@ def local_train(global_state, images, step_fn, opt, *, epochs: int,
                                              lr, global_enc)
             steps += 1
     return state["online"], {**last, "steps": steps}
+
+
+def replay_batch_plan(key, n: int, epochs: int, batch_size: int,
+                      total_steps: int):
+    """Host-side replay of ``local_train``'s RNG/batch chain for one client.
+
+    Performs exactly the key splits and permutations ``local_train`` would,
+    so the vectorized engine (``repro.federated.engine``) consumes identical
+    batches and per-step keys and matches the sequential reference. Returns
+
+        batch_idx  (total_steps, batch_size) int32 — shard-local positions
+        step_keys  (total_steps, 2) uint32         — per-step PRNG keys
+        valid      (total_steps,) bool             — False for padded steps
+
+    Clients with fewer than ``total_steps`` real steps (ragged shards) are
+    padded at the end; padded steps carry index 0 / key 0 and must be
+    masked out by the caller.
+    """
+    nb = n // batch_size
+    if epochs * nb > total_steps:
+        raise ValueError(f"client needs {epochs * nb} steps > padded "
+                         f"budget {total_steps}")
+    batch_idx, step_keys = _replay_plan_jit(
+        key, n=n, epochs=epochs, batch_size=batch_size,
+        total_steps=total_steps)
+    valid = np.zeros((total_steps,), bool)
+    valid[:epochs * nb] = True
+    return batch_idx, step_keys, valid
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "epochs", "batch_size",
+                                    "total_steps"))
+def _replay_plan_jit(key, *, n, epochs, batch_size, total_steps):
+    """The split/permute chain of ``local_train``, unrolled in one program
+    so the vmap engine pays one dispatch per client instead of one per
+    split."""
+    nb = n // batch_size
+    batch_idx = jnp.zeros((total_steps, batch_size), jnp.int32)
+    step_keys = jnp.zeros((total_steps, 2), jnp.uint32)
+    t = 0
+    for _ in range(epochs):
+        key, kp = jax.random.split(key)
+        perm = jax.random.permutation(kp, n).astype(jnp.int32)
+        for b in range(nb):
+            key, kb = jax.random.split(key)
+            batch_idx = batch_idx.at[t].set(
+                perm[b * batch_size:(b + 1) * batch_size])
+            step_keys = step_keys.at[t].set(kb)
+            t += 1
+    return batch_idx, step_keys

@@ -3,23 +3,27 @@
 Simulates the full FL process on one host: N clients with IID/Dirichlet
 shards, per-round client sampling, local MoCo v3 (or SimCLR/BYOL) training
 with the stage schedule, FedAvg aggregation, server-side calibration and
-communication accounting. This is the reference implementation the
-multi-pod launcher (``repro.launch.train``) distributes: there, the client
-loop becomes a pjit'd program with clients mapped onto the mesh's data
-axis, but the round/stage logic below is shared.
+communication accounting.
+
+The per-round "train participants, aggregate" middle is delegated to an
+execution engine (``repro.federated.engine``): ``sequential`` loops over
+clients one at a time (the numerical reference), ``vmap`` stacks the
+sampled clients on a leading axis and runs the whole round — local steps
+and FedAvg — as one jit'd program. The stage schedule, LR, calibration and
+comm-accounting logic here is shared by both engines unchanged.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import schedule as sched
 from repro.core import ssl as ssl_mod
-from repro.federated import aggregate, client as client_mod, comm, server
+from repro.federated import comm, server
+from repro.federated import engine as engine_mod
 from repro.optim import make_optimizer
 from repro.optim.schedules import learning_rate, scaled_base_lr
 
@@ -38,11 +42,12 @@ class FLHistory:
 
 def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                aux_images=None, key=None, encoder=None, image_size: int = 32,
-               log=None) -> tuple:
+               log=None, engine: str = "sequential") -> tuple:
     """Run the FL process; returns (final_state, FLHistory).
 
     images: (n, H, W, 3) pooled training pool; client_indices: list of index
-    arrays (one per client); aux_images: D_g for server calibration.
+    arrays (one per client); aux_images: D_g for server calibration;
+    engine: "sequential" (reference) or "vmap" (one dispatch per round).
     """
     key = key if key is not None else jax.random.PRNGKey(fl.seed)
     if encoder is None:
@@ -53,19 +58,10 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
     plans = sched.build_schedule(fl, encoder.num_stages)
     base_lr = scaled_base_lr(train_cfg.base_lr, train_cfg.batch_size)
     hist = FLHistory()
-    counts = [len(ix) for ix in client_indices]
 
-    step_cache: Dict[tuple, Any] = {}
-
-    def get_step(plan):
-        sig = (plan.sub_layers, plan.active_from, plan.align,
-               plan.depth_dropout)
-        if sig not in step_cache:
-            step_cache[sig] = client_mod.make_local_step(
-                encoder, ssl_cfg, opt, sub_layers=plan.sub_layers,
-                active_from=plan.active_from, align=plan.align,
-                depth_dropout=plan.depth_dropout)
-        return step_cache[sig]
+    eng = engine_mod.make_engine(
+        engine, encoder=encoder, ssl_cfg=ssl_cfg, opt=opt, fl=fl,
+        train_cfg=train_cfg, images=images, client_indices=client_indices)
 
     calib_cache: Dict[int, Any] = {}
 
@@ -96,18 +92,15 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                                              fl.clients_per_round)
         global_enc = (jax.tree.map(jnp.copy, state["online"]["enc"])
                       if plan.align else None)
-        step_fn = get_step(plan)
-        outs, losses = [], []
-        for i in participants:
+        # per-participant keys are split here, identically for both
+        # engines, so the main RNG chain (and the calibration key below)
+        # is engine-independent
+        client_keys = []
+        for _ in participants:
             key, kc = jax.random.split(key)
-            online_i, m = client_mod.local_train(
-                state, images[client_indices[i]], step_fn, opt,
-                epochs=fl.local_epochs, batch_size=train_cfg.batch_size,
-                key=kc, lr=lr, global_enc=global_enc)
-            outs.append(online_i)
-            losses.append(float(m["loss"]))
-        w = aggregate.client_weights([counts[i] for i in participants])
-        new_online = aggregate.fedavg(outs, w)
+            client_keys.append(kc)
+        new_online, losses = eng.run_round(
+            state, plan, participants, client_keys, lr, global_enc)
         state = {**state, "online": new_online}
         if plan.server_calibrate and aux_images is not None:
             key, kg = jax.random.split(key)

@@ -1,0 +1,221 @@
+"""Multi-client round execution engines for the FL driver.
+
+Two interchangeable engines run the "train the sampled clients, then
+aggregate" middle of a communication round (``repro.federated.driver`` owns
+the stage schedule, LR, server calibration and comm accounting around them):
+
+  sequential  the numerical reference — a Python loop over participants,
+              each running ``client.local_train`` batch by batch.
+  vmap        the vectorized engine — clients' shards are stacked on a
+              leading axis (``data.partition.stack_shards``), the per-batch
+              local step is ``jax.vmap``-ed over that axis and driven by a
+              single ``lax.scan`` over local steps, and FedAvg
+              (``aggregate.fedavg_stacked``) is fused into the same jit'd
+              program: one XLA dispatch executes the whole round.
+
+Parity: the vmap engine replays the sequential driver's exact per-client
+RNG chain on the host (``client.replay_batch_plan``) and feeds the
+resulting batch indices / per-step keys into the compiled program, so both
+engines consume identical data in identical order; ragged shards are
+padded to the longest client and padded steps are masked to a no-op.
+See docs/engine.md.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.partition import stack_shards
+from repro.federated import aggregate, client as client_mod
+
+ENGINES = ("sequential", "vmap")
+
+
+def _pool_len(pool) -> int:
+    return jax.tree.leaves(pool)[0].shape[0]
+
+
+def build_round_program(client_init, client_step, extract):
+    """Compile a full FL round into one jit'd program.
+
+    client_init(broadcast) -> carry          (per-client local state)
+    client_step(carry, batch, key, lr, broadcast) -> (carry, loss)
+    extract(carry) -> pytree to aggregate
+
+    The returned function has signature
+
+        round(broadcast, shards, batch_idx, step_keys, valid, weights, lr)
+          -> (aggregated_tree, (C,) last-step losses)
+
+    where ``broadcast`` is shared across clients (global state, alignment
+    context), every leaf of ``shards`` is ``(C, n_max, ...)``, ``batch_idx``
+    is ``(C, T, B)`` shard-local gather indices, ``step_keys`` is
+    ``(C, T, 2)`` and ``valid`` is ``(C, T)``. Steps with ``valid=False``
+    still execute (uniform trip count under vmap) but their state update is
+    discarded, so padding never changes the result.
+    """
+    def round_fn(broadcast, shards, batch_idx, step_keys, valid, weights, lr):
+        def one_client(shard, idx, keys, ok):
+            def body(carry, xs):
+                c, last = carry
+                i, k, v = xs
+                batch = jax.tree.map(lambda a: a[i], shard)
+                nc, loss = client_step(c, batch, k, lr, broadcast)
+                keep = functools.partial(jnp.where, v)
+                return (jax.tree.map(keep, nc, c),
+                        jnp.where(v, loss, last)), None
+
+            carry0 = (client_init(broadcast), jnp.float32(0.0))
+            (c, last), _ = jax.lax.scan(body, carry0, (idx, keys, ok))
+            return extract(c), last
+
+        outs, losses = jax.vmap(one_client)(shards, batch_idx, step_keys,
+                                            valid)
+        return aggregate.fedavg_stacked(outs, weights), losses
+
+    return jax.jit(round_fn)
+
+
+class SequentialEngine:
+    """Reference engine: the seed driver's per-client Python loop."""
+
+    name = "sequential"
+
+    def __init__(self, *, encoder, ssl_cfg, opt, fl, train_cfg, images,
+                 client_indices):
+        self.encoder, self.ssl_cfg, self.opt = encoder, ssl_cfg, opt
+        self.fl, self.train_cfg = fl, train_cfg
+        self.images, self.client_indices = images, client_indices
+        self.counts = [len(ix) for ix in client_indices]
+        self._steps: Dict[tuple, object] = {}
+
+    def _step(self, plan):
+        sig = (plan.sub_layers, plan.active_from, plan.align,
+               plan.depth_dropout)
+        if sig not in self._steps:
+            self._steps[sig] = client_mod.make_local_step(
+                self.encoder, self.ssl_cfg, self.opt,
+                sub_layers=plan.sub_layers, active_from=plan.active_from,
+                align=plan.align, depth_dropout=plan.depth_dropout)
+        return self._steps[sig]
+
+    def run_round(self, state, plan, participants, client_keys, lr,
+                  global_enc):
+        step_fn = self._step(plan)
+        outs, losses = [], []
+        for i, kc in zip(participants, client_keys):
+            online_i, m = client_mod.local_train(
+                state, self.images[self.client_indices[i]], step_fn,
+                self.opt, epochs=self.fl.local_epochs,
+                batch_size=self.train_cfg.batch_size, key=kc, lr=lr,
+                global_enc=global_enc)
+            outs.append(online_i)
+            losses.append(float(m["loss"]))
+        w = aggregate.client_weights([self.counts[i] for i in participants])
+        return aggregate.fedavg(outs, w), losses
+
+
+class VmapEngine:
+    """Vectorized engine: one compiled program per (plan signature)."""
+
+    name = "vmap"
+
+    def __init__(self, *, encoder, ssl_cfg, opt, fl, train_cfg, images,
+                 client_indices):
+        self.encoder, self.ssl_cfg, self.opt = encoder, ssl_cfg, opt
+        self.fl, self.train_cfg = fl, train_cfg
+        self.counts = [len(ix) for ix in client_indices]
+        bs = train_cfg.batch_size
+        if min(self.counts) < bs:
+            # the sequential reference also cannot train such a client (it
+            # would run zero local steps); fail loudly instead of silently
+            # averaging an untrained client with a fabricated 0.0 loss
+            raise ValueError(
+                f"vmap engine needs every shard >= batch size: smallest "
+                f"shard {min(self.counts)} < batch {bs}")
+        self.total_steps = fl.local_epochs * max(c // bs
+                                                 for c in self.counts)
+        # stack padded shard *indices*, not data: per-round gathers pull
+        # only the sampled participants' rows from the pool, so device
+        # memory scales with clients_per_round x n_max, not N x n_max
+        self._pool = images
+        self._pad_idx, _ = stack_shards(
+            jnp.arange(_pool_len(images)), client_indices)
+        # full-participation rounds reuse the same shards/weights
+        self._all = list(range(len(self.counts)))
+        self._all_weights = aggregate.client_weights(self.counts)
+        self._full_shards = None
+        self._programs: Dict[tuple, object] = {}
+
+    def _gather(self, idx):
+        """(C, n_max) pool indices -> client-stacked shard data."""
+        return jax.tree.map(lambda a: a[idx], self._pool)
+
+    def _program(self, plan):
+        sig = (plan.sub_layers, plan.active_from, plan.align,
+               plan.depth_dropout)
+        if sig not in self._programs:
+            step = client_mod.make_local_step(
+                self.encoder, self.ssl_cfg, self.opt,
+                sub_layers=plan.sub_layers, active_from=plan.active_from,
+                align=plan.align, depth_dropout=plan.depth_dropout)
+            opt = self.opt
+
+            def client_init(bc):
+                g = bc["state"]
+                st = {"online": jax.tree.map(jnp.asarray, g["online"])}
+                if "target" in g:
+                    # target branch re-initialized from the downloaded
+                    # global model, exactly like local_train
+                    st["target"] = {
+                        "enc": jax.tree.map(jnp.copy, g["online"]["enc"]),
+                        "proj": jax.tree.map(jnp.copy, g["online"]["proj"]),
+                    }
+                return st, opt.init(st["online"])
+
+            def client_step(carry, batch, key, lr, bc):
+                st, os_ = carry
+                st, os_, m = step(st, os_, batch, key, lr, bc["global_enc"])
+                return (st, os_), m["loss"]
+
+            self._programs[sig] = build_round_program(
+                client_init, client_step, lambda c: c[0]["online"])
+        return self._programs[sig]
+
+    def run_round(self, state, plan, participants, client_keys, lr,
+                  global_enc):
+        bs = self.train_cfg.batch_size
+        idxs, keys, valids = [], [], []
+        for i, kc in zip(participants, client_keys):
+            bi, sk, v = client_mod.replay_batch_plan(
+                kc, self.counts[i], self.fl.local_epochs, bs,
+                self.total_steps)
+            idxs.append(bi)
+            keys.append(sk)
+            valids.append(v)
+        if list(participants) == self._all:
+            if self._full_shards is None:
+                self._full_shards = self._gather(self._pad_idx)
+            shards, w = self._full_shards, self._all_weights
+        else:
+            pidx = jnp.asarray(np.asarray(participants, np.int32))
+            shards = self._gather(self._pad_idx[pidx])
+            w = aggregate.client_weights(
+                [self.counts[i] for i in participants])
+        new_online, losses = self._program(plan)(
+            {"state": state, "global_enc": global_enc}, shards,
+            jnp.stack(idxs), jnp.stack(keys),
+            jnp.asarray(np.stack(valids)), w, jnp.float32(lr))
+        return new_online, [float(x) for x in np.asarray(losses)]
+
+
+def make_engine(name: str, **kw):
+    if name == "sequential":
+        return SequentialEngine(**kw)
+    if name == "vmap":
+        return VmapEngine(**kw)
+    raise ValueError(f"unknown engine '{name}'; one of {ENGINES}")

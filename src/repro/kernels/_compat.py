@@ -1,0 +1,17 @@
+"""Pallas-TPU API compat across jax versions.
+
+``pltpu.CompilerParams`` is the current spelling; on jax <= 0.4.x the same
+dataclass is ``pltpu.TPUCompilerParams``. Kernels import it from here so
+they run on both.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+try:
+    CompilerParams = pltpu.CompilerParams
+except AttributeError:
+    try:
+        CompilerParams = pltpu.TPUCompilerParams
+    except AttributeError as e:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; this jax version is unsupported") from e

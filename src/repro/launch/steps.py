@@ -158,3 +158,63 @@ def make_decode_step(cfg):
     def step(params, caches, token, pos):
         return lm_mod.decode_step(params, caches, token, pos, cfg)
     return step
+
+
+# ---------------------------------------------------------------------------
+# vectorized multi-client round (LM FedSSL)
+# ---------------------------------------------------------------------------
+def make_fl_round_program(cfg, train_cfg, *, mode: str = "train",
+                          sub_layers: int = None, active_from: int = None,
+                          align: bool = None):
+    """One jit'd program for an entire LM FL round: every sampled client's
+    local steps run as a ``lax.scan`` vmapped over the client axis, with
+    FedAvg fused at the end (``repro.federated.engine`` semantics).
+
+    Stage defaults follow ``mode`` (end-to-end for ``train``, final-stage
+    + alignment for ``train_lw``); stage schedules override
+    ``sub_layers`` / ``active_from`` / ``align`` per ``RoundPlan``.
+
+    Returns ``(round_fn, opt)``; ``round_fn(broadcast, shards, batch_idx,
+    step_keys, valid, weights, lr)`` where ``broadcast`` holds ``params``
+    (and ``global_params`` when aligning) and every ``shards`` leaf is
+    ``(C, n_max, ...)``. Unlike ``make_train_step``, the ``lr`` argument
+    is live — each round can pass its scheduled learning rate.
+    """
+    from repro.federated.engine import build_round_program
+
+    opt = make_optimizer(train_cfg)
+    S = lm_mod.num_stages(cfg) if not is_encdec(cfg) else cfg.num_layers
+    lw = mode == "train_lw"
+    if sub_layers is None:
+        sub_layers = S
+    if active_from is None:
+        active_from = S - 1 if lw else 0
+    if align is None:
+        align = lw
+    align_weight = ALIGN_WEIGHT if align else 0.0
+    remat = train_cfg.remat
+
+    def step(params, opt_state, batch, global_params, lr):
+        def loss_fn(p):
+            return _loss_for(cfg, p, batch, sub_layers=sub_layers,
+                             active_from=active_from,
+                             global_params=global_params if align else None,
+                             align_weight=align_weight, remat=remat)
+
+        (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        mask = (stage_update_mask(params, sub_layers, active_from)
+                if (active_from > 0 or sub_layers < S) else None)
+        new_params, new_opt = opt.update(grads, opt_state, params, lr, mask)
+        return new_params, new_opt, {"loss": loss, **m}
+
+    def client_init(bc):
+        p = jax.tree.map(jnp.asarray, bc["params"])
+        return p, opt.init(p)
+
+    def client_step(carry, batch, key, lr, bc):
+        p, o = carry
+        p, o, m = step(p, o, batch, bc.get("global_params"), lr)
+        return (p, o), m["loss"]
+
+    return build_round_program(client_init, client_step,
+                               lambda c: c[0]), opt

@@ -11,9 +11,14 @@ dry-run lowers (repro.launch.steps); this launcher exercises the identical
 round/stage logic at host scale so the whole FL system is runnable
 end-to-end in this container.
 
+Either mode runs on one of two round engines (``--engine``): ``sequential``
+trains sampled clients one at a time (the numerical reference), ``vmap``
+stacks them on a leading axis and executes each round — all clients' local
+steps plus FedAvg — as a single jit'd program (``repro.federated.engine``).
+
 Example:
   PYTHONPATH=src python -m repro.launch.train --mode vit \
-      --schedule lw_fedssl --rounds 12 --clients 4 --batch 64
+      --schedule lw_fedssl --rounds 12 --clients 4 --batch 64 --engine vmap
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import (FLConfig, SSLConfig, TrainConfig, load_arch,
                                 reduced)
@@ -60,11 +66,11 @@ def train_vit(args):
     state, hist = run_fedssl(
         cfg, ssl_cfg, fl, tc, images=images,
         client_indices=[jnp.asarray(i) for i in idx], aux_images=aux,
-        key=key, log=print)
+        key=key, log=print, engine=args.engine)
     print(f"training done in {time.time() - t0:.1f}s; "
           f"total comm {hist.total_comm / 1e6:.2f} MB")
     enc = ssl_mod.make_vit_encoder(cfg)
-    n_eval = min(args.samples, 512)
+    n_eval = min(args.samples // 2, 512)
     acc = fl_eval.linear_eval(
         enc, state["online"]["enc"], images[:n_eval], labels[:n_eval],
         images[n_eval:2 * n_eval], labels[n_eval:2 * n_eval],
@@ -113,31 +119,73 @@ def train_lm(args):
             step_cache[sig] = train_step
         return step_cache[sig]
 
+    w = aggregate.client_weights([len(shards[i])
+                                  for i in range(fl.num_clients)])
+
+    def batch_start(ix, b):
+        """Shard-local start of local step ``b`` — the single source of
+        truth for batch selection, shared by both engines."""
+        return (b * tc.batch_size) % max(1, len(ix) - tc.batch_size)
+
+    use_vmap = args.engine == "vmap"
+    if use_vmap:
+        from repro.data.partition import stack_shards
+        from repro.launch.steps import make_fl_round_program
+        if min(len(s) for s in shards) < tc.batch_size:
+            raise SystemExit("--engine vmap needs every shard >= batch size")
+        stacked, _ = stack_shards({"tokens": toks, "labels": labs},
+                                  [jnp.asarray(s) for s in shards])
+        nbs = [max(1, len(s) // tc.batch_size) for s in shards]
+        T = max(nbs) * fl.local_epochs
+        # replay the sequential loop's deterministic batch slices as
+        # shard-local gather indices; ragged clients are masked out
+        batch_idx = np.zeros((fl.num_clients, T, tc.batch_size), np.int32)
+        valid = np.zeros((fl.num_clients, T), bool)
+        for ci, ix in enumerate(shards):
+            for b in range(nbs[ci] * fl.local_epochs):
+                start = batch_start(ix, b)
+                batch_idx[ci, b] = np.arange(start, start + tc.batch_size)
+                valid[ci, b] = True
+        batch_idx, valid = jnp.asarray(batch_idx), jnp.asarray(valid)
+        step_keys = jnp.zeros((fl.num_clients, T, 2), jnp.uint32)
+        round_cache = {}
+
+        def get_round(plan):
+            sig = (plan.sub_layers, plan.active_from, plan.align)
+            if sig not in round_cache:
+                round_cache[sig] = make_fl_round_program(
+                    cfg, tc, sub_layers=plan.sub_layers,
+                    active_from=plan.active_from, align=plan.align)[0]
+            return round_cache[sig]
+
     hist = []
     for plan in plans:
         if plan.new_stage and fl.weight_transfer:
             params = sched.transfer_model(params, cfg, plan.stage)
         lr = float(learning_rate(plan.round_idx, fl.rounds, base_lr,
                                  tc.lr_schedule))
-        step = get_step(plan)
         global_params = jax.tree.map(jnp.copy, params) if plan.align else None
-        outs, losses = [], []
-        for ci in range(fl.num_clients):
-            p_i = jax.tree.map(jnp.asarray, params)
-            o_i = opt.init(p_i)
-            ix = shards[ci]
-            nb = max(1, len(ix) // tc.batch_size)
-            for b in range(nb * fl.local_epochs):
-                sel = ix[(b * tc.batch_size) % max(1, len(ix) - tc.batch_size):]
-                sel = sel[:tc.batch_size]
-                batch = {"tokens": toks[sel], "labels": labs[sel]}
-                p_i, o_i, m = step(p_i, o_i, batch, global_params,
-                                   jnp.float32(lr))
-            outs.append(p_i)
-            losses.append(float(m["loss"]))
-        w = aggregate.client_weights([len(shards[i])
-                                      for i in range(fl.num_clients)])
-        params = aggregate.fedavg(outs, w)
+        if use_vmap:
+            params, lvec = get_round(plan)(
+                {"params": params, "global_params": global_params},
+                stacked, batch_idx, step_keys, valid, w, jnp.float32(lr))
+            losses = [float(x) for x in np.asarray(lvec)]
+        else:
+            step = get_step(plan)
+            outs, losses = [], []
+            for ci in range(fl.num_clients):
+                p_i = jax.tree.map(jnp.asarray, params)
+                o_i = opt.init(p_i)
+                ix = shards[ci]
+                nb = max(1, len(ix) // tc.batch_size)
+                for b in range(nb * fl.local_epochs):
+                    sel = ix[batch_start(ix, b):][:tc.batch_size]
+                    batch = {"tokens": toks[sel], "labels": labs[sel]}
+                    p_i, o_i, m = step(p_i, o_i, batch, global_params,
+                                       jnp.float32(lr))
+                outs.append(p_i)
+                losses.append(float(m["loss"]))
+            params = aggregate.fedavg(outs, w)
         hist.append(sum(losses) / len(losses))
         print(f"round {plan.round_idx + 1}/{fl.rounds} stage {plan.stage} "
               f"loss {hist[-1]:.4f}")
@@ -151,6 +199,10 @@ def main():
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--schedule", default="lw_fedssl",
                     choices=sched.SCHEDULES)
+    ap.add_argument("--engine", default="sequential",
+                    choices=("sequential", "vmap"),
+                    help="round engine: per-client loop (reference) or "
+                         "one jit'd vmapped program per round")
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--clients-per-round", type=int, default=0)

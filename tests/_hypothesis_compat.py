@@ -1,0 +1,51 @@
+"""Use hypothesis when installed; otherwise a plain-pytest fallback.
+
+Property tests import ``given``/``settings``/``st`` from here. Without
+hypothesis, each ``@given`` expands to a ``pytest.mark.parametrize`` over a
+small fixed grid (endpoints + midpoint per strategy) so the tier-1 suite
+still collects and exercises every property, just without fuzzing.
+"""
+import itertools
+
+import pytest
+
+try:
+    from hypothesis import assume, given, settings, strategies as st  # noqa: F401,E501
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def assume(condition):
+        if not condition:
+            pytest.skip("assumption not satisfied for this fixed example")
+        return True
+
+    class _Samples:
+        def __init__(self, values):
+            self.values = list(values)
+
+    class st:  # noqa: N801 - mirrors hypothesis.strategies
+        @staticmethod
+        def integers(lo, hi):
+            return _Samples(sorted({lo, (lo + hi) // 2, hi}))
+
+        @staticmethod
+        def floats(lo, hi, **_kw):
+            return _Samples(sorted({lo, (lo + hi) / 2, hi}))
+
+        @staticmethod
+        def sampled_from(values):
+            return _Samples(list(values))
+
+        @staticmethod
+        def booleans():
+            return _Samples([False, True])
+
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(**strategies):
+        names = sorted(strategies)
+        grid = list(itertools.product(*(strategies[n].values
+                                        for n in names)))
+        return lambda f: pytest.mark.parametrize(",".join(names), grid)(f)

@@ -13,6 +13,12 @@ import pytest  # noqa: E402
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running FL integration test "
+        "(deselect with -m 'not slow')")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

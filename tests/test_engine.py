@@ -1,0 +1,193 @@
+"""Vectorized-engine invariants: the vmap engine must reproduce the
+sequential reference (same seed => same losses / params / comm bytes),
+including ragged shards and client subsampling; padded shard construction
+and the host-side RNG replay behave as documented."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (FLConfig, ModelConfig, SSLConfig,
+                                TrainConfig)
+from repro.core import schedule as sched
+from repro.data import iid_partition, synthetic_images
+from repro.data.partition import stack_shards
+from repro.federated import comm
+from repro.federated.client import replay_batch_plan
+from repro.federated.driver import run_fedssl
+from repro.models import lm as lm_mod
+
+CFG = ModelConfig("t-vit", "dense", 2, 32, 2, 2, 64, 0, causal=False,
+                  compute_dtype="float32", act="gelu")
+SSLC = SSLConfig(proj_hidden=32, pred_hidden=32, proj_dim=16)
+TC = TrainConfig(batch_size=16, base_lr=1.5e-4)
+
+
+def _run(engine, *, schedule="e2e", rounds=2, client_indices=None,
+         samples=96, clients=3, **fl_kw):
+    key = jax.random.PRNGKey(0)
+    imgs, _ = synthetic_images(key, samples, 10, 32)
+    if client_indices is None:
+        client_indices = [jnp.asarray(i)
+                          for i in iid_partition(samples, clients)]
+    fl = FLConfig(num_clients=len(client_indices), rounds=rounds,
+                  local_epochs=1, schedule=schedule, server_epochs=1,
+                  **fl_kw)
+    return run_fedssl(CFG, SSLC, fl, TC, images=imgs,
+                      client_indices=client_indices,
+                      aux_images=imgs[:16], key=key, engine=engine)
+
+
+def _assert_state_close(s1, s2, atol=1e-4):
+    for a, b in zip(jax.tree.leaves(s1["online"]),
+                    jax.tree.leaves(s2["online"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol)
+
+
+@pytest.fixture(scope="module")
+def lw_runs():
+    """One LW-FedSSL run per engine, shared by the parity and comm tests."""
+    return {e: _run(e, schedule="lw_fedssl") for e in ("sequential", "vmap")}
+
+
+# ---------------------------------------------------------------------------
+# parity
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_vmap_matches_sequential_e2e():
+    s_seq, h_seq = _run("sequential")
+    s_v, h_v = _run("vmap")
+    np.testing.assert_allclose(h_seq.loss, h_v.loss, atol=1e-4)
+    _assert_state_close(s_seq, s_v)
+
+
+@pytest.mark.slow
+def test_vmap_matches_sequential_lw_fedssl(lw_runs):
+    """Covers stage walking, alignment loss, server calibration."""
+    s_seq, h_seq = lw_runs["sequential"]
+    s_v, h_v = lw_runs["vmap"]
+    assert h_seq.round_stage == h_v.round_stage == [1, 2]
+    np.testing.assert_allclose(h_seq.loss, h_v.loss, atol=1e-4)
+    _assert_state_close(s_seq, s_v)
+
+
+@pytest.mark.slow
+def test_vmap_parity_ragged_and_subsampled():
+    """Non-divisible shards (40/24/16 @ batch 16 => 2/1/1 local steps) and
+    clients_per_round < num_clients: padded steps must be true no-ops."""
+    idx = [jnp.arange(0, 40), jnp.arange(40, 64), jnp.arange(64, 80)]
+    kw = dict(client_indices=idx, samples=80, clients_per_round=2)
+    s_seq, h_seq = _run("sequential", **kw)
+    s_v, h_v = _run("vmap", **kw)
+    np.testing.assert_allclose(h_seq.loss, h_v.loss, atol=1e-4)
+    _assert_state_close(s_seq, s_v)
+
+
+# ---------------------------------------------------------------------------
+# communication accounting
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_comm_identical_across_engines(lw_runs):
+    _, h_seq = lw_runs["sequential"]
+    _, h_v = lw_runs["vmap"]
+    assert h_seq.download_bytes == h_v.download_bytes
+    assert h_seq.upload_bytes == h_v.upload_bytes
+
+
+def test_comm_lw_fedssl_savings_vs_e2e(rng):
+    """Per stage, LW-FedSSL exchanges at most what e2e does, its upload is
+    one constant block, and the absolute download saving over e2e shrinks
+    monotonically as stages accumulate (paper Fig. 5c/5d)."""
+    cfg = ModelConfig("t", "dense", 6, 32, 2, 2, 64, 50,
+                      compute_dtype="float32")
+    params = lm_mod.init_lm(rng, cfg)
+    e2e_plan = sched.build_schedule(FLConfig(rounds=2, schedule="e2e"), 6)[0]
+    e2e = comm.round_comm_bytes(params, e2e_plan, include_heads=False)
+    plans = sched.build_schedule(FLConfig(rounds=6, schedule="lw_fedssl"), 6)
+    assert [p.stage for p in plans] == [1, 2, 3, 4, 5, 6]
+    savings = []
+    for p in plans:
+        cb = comm.round_comm_bytes(params, p, include_heads=False)
+        assert cb["download"] <= e2e["download"]
+        assert cb["upload"] < e2e["upload"]
+        savings.append(e2e["download"] - cb["download"])
+    assert all(a >= b for a, b in zip(savings, savings[1:]))
+    assert savings[0] > savings[-1]
+    # upload is a single block from stage 2 on
+    ups = [comm.round_comm_bytes(params, p, include_heads=False)["upload"]
+           for p in plans]
+    assert len(set(ups[1:])) == 1
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+def test_stack_shards_wrap_padding():
+    pool = jnp.arange(10, dtype=jnp.int32) * 10
+    stacked, lengths = stack_shards(pool, [np.arange(4), np.arange(4, 10)])
+    assert stacked.shape == (2, 6) and list(lengths) == [4, 6]
+    np.testing.assert_array_equal(np.asarray(stacked[1]),
+                                  np.arange(4, 10) * 10)
+    # ragged shard wraps around its own samples
+    np.testing.assert_array_equal(np.asarray(stacked[0]),
+                                  np.array([0, 10, 20, 30, 0, 10]))
+    # pytree pools stack leaf-wise
+    tree, _ = stack_shards({"a": pool, "b": pool + 1},
+                           [np.arange(4), np.arange(4, 10)])
+    np.testing.assert_array_equal(np.asarray(tree["a"]) + 1,
+                                  np.asarray(tree["b"]))
+
+
+def test_replay_batch_plan_matches_local_train_chain():
+    key = jax.random.PRNGKey(7)
+    n, bs, epochs, total = 40, 16, 2, 6
+    idx, keys, valid = replay_batch_plan(key, n, epochs, bs, total)
+    assert idx.shape == (total, bs) and keys.shape == (total, 2)
+    assert list(valid) == [True] * 4 + [False] * 2      # nb = 2 per epoch
+    # replicate local_train's chain by hand
+    k = key
+    k, kp = jax.random.split(k)
+    perm = np.asarray(jax.random.permutation(kp, n))
+    k, kb = jax.random.split(k)
+    np.testing.assert_array_equal(idx[0], perm[:bs])
+    np.testing.assert_array_equal(keys[0], np.asarray(kb))
+    # each epoch's batches are disjoint slices of one permutation
+    assert len(set(np.asarray(idx[:2]).ravel())) == 2 * bs
+
+
+def test_lm_multi_client_round_program():
+    """steps.make_fl_round_program: one program == per-client loop + fedavg."""
+    from repro.data.synthetic import synthetic_tokens
+    from repro.federated import aggregate
+    from repro.launch.steps import make_fl_round_program, make_train_step
+
+    cfg = ModelConfig("t", "dense", 2, 32, 2, 2, 64, 50,
+                      compute_dtype="float32")
+    tc = TrainConfig(batch_size=8, base_lr=1e-3)
+    key = jax.random.PRNGKey(0)
+    toks, labs = synthetic_tokens(key, 32, 16, cfg.vocab_size)
+    params = lm_mod.init_lm(key, cfg)
+    shards = [np.arange(0, 16), np.arange(16, 32)]
+    stacked, _ = stack_shards({"tokens": toks, "labels": labs},
+                              [jnp.asarray(s) for s in shards])
+    prog, opt = make_fl_round_program(cfg, tc)   # lr passed live per round
+    C, T, B = 2, 2, tc.batch_size
+    batch_idx = jnp.asarray(
+        np.stack([[np.arange(0, B), np.arange(B, 2 * B)]] * C))
+    out, losses = prog(
+        {"params": params}, stacked, batch_idx,
+        jnp.zeros((C, T, 2), jnp.uint32), jnp.ones((C, T), bool),
+        aggregate.client_weights([16, 16]), jnp.float32(1e-3))
+    assert losses.shape == (C,) and np.isfinite(np.asarray(losses)).all()
+    # reference: run the same two clients sequentially and average
+    step, _ = make_train_step(cfg, tc, lr=1e-3)
+    outs = []
+    for ci in range(C):
+        p, o = jax.tree.map(jnp.asarray, params), opt.init(params)
+        for t in range(T):
+            sel = shards[ci][t * B:(t + 1) * B]
+            p, o, m = step(p, o, {"tokens": toks[sel], "labels": labs[sel]})
+        outs.append(p)
+    want = aggregate.fedavg(outs, aggregate.client_weights([16, 16]))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

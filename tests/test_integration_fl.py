@@ -16,12 +16,14 @@ SSLC = SSLConfig(proj_hidden=96, pred_hidden=96, proj_dim=24)
 TC = TrainConfig(batch_size=32, base_lr=1.5e-4)
 
 
-def _run(schedule, rounds=4, clients=2, samples=128, **fl_kw):
+def _run(schedule, rounds=4, clients=2, samples=128, local_epochs=1,
+         **fl_kw):
     key = jax.random.PRNGKey(0)
     imgs, _ = synthetic_images(key, samples, 10, 32)
     idx = [jnp.asarray(i) for i in iid_partition(samples, clients)]
-    fl = FLConfig(num_clients=clients, rounds=rounds, local_epochs=1,
-                  schedule=schedule, server_epochs=1, **fl_kw)
+    fl = FLConfig(num_clients=clients, rounds=rounds,
+                  local_epochs=local_epochs, schedule=schedule,
+                  server_epochs=1, **fl_kw)
     return run_fedssl(CFG, SSLC, fl, TC, images=imgs, client_indices=idx,
                       aux_images=imgs[:32], key=key)
 
@@ -62,8 +64,9 @@ def test_layerwise_cheaper_than_e2e_comm():
 
 @pytest.mark.slow
 def test_loss_decreases_over_rounds():
-    state, hist = _run("e2e", rounds=5, samples=160)
-    assert hist.loss[-1] < hist.loss[0]
+    # window-averaged: single-round SSL losses are augmentation-noisy
+    state, hist = _run("e2e", rounds=6, samples=160, local_epochs=2)
+    assert sum(hist.loss[-2:]) / 2 < sum(hist.loss[:2]) / 2
 
 
 @pytest.mark.slow
