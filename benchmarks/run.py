@@ -9,6 +9,9 @@
   fig14    rounds-per-stage allocation -> effective rounds per layer
   kernels  Pallas kernels vs jnp oracle (allclose + timing)
   roofline dry-run roofline table (reads results/dryrun_*.json)
+  engine   sequential vs vmap round engine throughput
+  transport wire payload pack/unpack throughput + per-codec compression
+           per schedule (writes results/transport_bench.json)
 
 ``python -m benchmarks.run`` runs the fast set; ``--full`` adds the
 reduced-scale FL accuracy benchmarks (table4), which train for real.
@@ -245,6 +248,82 @@ def bench_engine(rounds=8, clients=8):
     return rps
 
 
+def bench_transport(reps=5):
+    """Wire transport: pack/unpack throughput and per-codec compression
+    ratio per schedule (mid-training round, full-size ViT-T + MoCo heads).
+    Emits one BENCH json line and writes results/transport_bench.json for
+    the CI artifact."""
+    print("\n== Transport: payload pack/unpack + codec compression ==")
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import FLConfig, SSLConfig, load_arch
+    from repro.core import schedule as sched
+    from repro.core import ssl as ssl_mod
+    from repro.federated import comm
+    from repro.federated.transport import (Transport, pack_stage_payload,
+                                           unpack_stage_payload)
+
+    cfg = load_arch("vit-tiny")
+    sslc = SSLConfig()
+    enc = ssl_mod.make_vit_encoder(cfg)
+    online = ssl_mod.ssl_init(jax.random.PRNGKey(0), enc, sslc)["online"]
+    codecs = ("fp32", "fp16", "bf16", "int8", "topk:0.1")
+    rows = []
+    for schedule in SCHEDULES:
+        plans = sched.build_schedule(FLConfig(rounds=24, schedule=schedule),
+                                     cfg.num_layers)
+        plan = plans[len(plans) // 2]
+        t0s = Transport("fp32")
+        spec = t0s.plan_specs(online, plan)["upload"]
+        pack = jax.jit(lambda p: pack_stage_payload(p, spec))
+        unpack = jax.jit(lambda b, f: unpack_stage_payload(b, f, spec))
+        flat = pack(online)
+        jax.block_until_ready(flat)
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(pack(online))
+        t_pack = (time.time() - t0) / reps
+        jax.block_until_ready(unpack(online, flat))
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(unpack(online, flat))
+        t_unpack = (time.time() - t0) / reps
+        mb = spec.payload_bytes / 1e6
+        # throughput figures cover the upload payload; per-codec wire_mb /
+        # ratio below cover the full round trip (download + upload)
+        row = {"schedule": schedule, "upload_payload_mb": round(mb, 3),
+               "pack_gbps": round(mb / 1e3 / max(t_pack, 1e-9), 3),
+               "unpack_gbps": round(mb / 1e3 / max(t_unpack, 1e-9), 3),
+               "codecs": {}}
+        analytic = comm.round_comm_bytes(online, plan)
+        for name in codecs:
+            t = Transport(name)
+            sp = t.plan_specs(online, plan)
+            wire = {d: t.wire_bytes(sp[d]) for d in ("download", "upload")}
+            ratio = ((sp["download"].payload_bytes
+                      + sp["upload"].payload_bytes)
+                     / max(1, wire["download"] + wire["upload"]))
+            row["codecs"][name] = {
+                "round_wire_mb": round(
+                    (wire["download"] + wire["upload"]) / 1e6, 4),
+                "ratio": round(ratio, 2)}
+            if name == "fp32":
+                assert wire == analytic, (wire, analytic)
+        rows.append(row)
+        cs = "  ".join(f"{n} {c['ratio']:.2f}x"
+                       for n, c in row["codecs"].items())
+        print(f"{NAMES[schedule]:12s} payload {mb:7.2f}MB  "
+              f"pack {row['pack_gbps']:5.2f}GB/s "
+              f"unpack {row['unpack_gbps']:5.2f}GB/s  {cs}")
+    RESULTS.mkdir(exist_ok=True)
+    out = RESULTS / "transport_bench.json"
+    out.write_text(json.dumps(rows, indent=1))
+    print("BENCH " + json.dumps({"bench": "transport", "rows": rows}))
+    print(f"(fp32 wire bytes == analytic comm bytes verified; "
+          f"json -> {out})")
+    return rows
+
+
 def bench_table4(rounds=4):
     print("\n== Table 4: auxiliary data amount (reduced-scale, "
           "synthetic) ==")
@@ -282,7 +361,7 @@ BENCHES = {
     "table1": bench_table1, "table2": bench_table2, "table3": bench_table3,
     "fig5": bench_fig5, "fig6": bench_fig6, "fig14": bench_fig14,
     "kernels": bench_kernels, "roofline": bench_roofline,
-    "engine": bench_engine,
+    "engine": bench_engine, "transport": bench_transport,
 }
 FULL_BENCHES = {"table4": bench_table4}
 

@@ -244,6 +244,11 @@ class FLConfig:
     stage_allocation: str = "uniform"        # uniform | left_skewed | right_skewed
     weight_transfer: bool = True             # L_{s-1} -> L_s init (paper §B.2)
     depth_dropout: float = 0.0               # FLL+DD frozen-layer drop rate
+    include_heads: bool = True               # exchange SSL heads; False =
+    #                                          encoder-only wire/accounting
+    #                                          (heads revert to the server
+    #                                          copy each round — the sim
+    #                                          keeps no per-client state)
     server_epochs: int = 3                   # server-side calibration epochs
     aux_fraction: float = 0.1                # |D_g| as fraction (paper §5.4)
     dirichlet_beta: float = 0.0              # 0 => IID partition

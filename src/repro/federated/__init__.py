@@ -2,4 +2,8 @@ from repro.federated.aggregate import fedavg, fedavg_stacked  # noqa: F401
 from repro.federated.comm import round_comm_bytes, tree_bytes  # noqa: F401
 from repro.federated.driver import run_fedssl  # noqa: F401
 from repro.federated.engine import ENGINES, make_engine  # noqa: F401
+from repro.federated.leaves import classify_leaf  # noqa: F401
 from repro.federated.masks import stage_update_mask  # noqa: F401
+from repro.federated.transport import (CODECS, Transport,  # noqa: F401
+                                       make_codec, pack_stage_payload,
+                                       unpack_stage_payload)

@@ -4,13 +4,18 @@ Bytes are derived from the actual parameter pytrees: a stage range selects
 the slice of every stacked block leaf; embedding-side and head parameters
 are added according to the flags. Downloads/uploads per round follow the
 ``RoundPlan`` produced by ``repro.core.schedule``.
+
+These numbers are the *analytic* prediction. ``repro.federated.transport``
+materializes the same payloads on a real wire path; ``plan_payloads`` below
+is the shared membership rule, so with the identity codec the transport's
+measured bytes equal ``round_comm_bytes`` exactly.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax
 
-from repro.federated.masks import EMBED_KEYS, STACKED_KEYS, _path_keys
+from repro.federated.leaves import classify_leaf
 
 
 def tree_bytes(tree) -> int:
@@ -19,22 +24,22 @@ def tree_bytes(tree) -> int:
 
 
 def _leaf_bytes(path, a, stage_range, include_embed, include_heads):
-    keys = _path_keys(path)
-    stacked = next((k for k in keys if k in STACKED_KEYS), None)
+    kind = classify_leaf(path)
     itemsize = a.dtype.itemsize
-    if stacked is not None:
+    full = int(np.prod(a.shape)) * itemsize
+    if kind == "stacked":
         lo, hi = stage_range
         lo, hi = max(0, lo), min(a.shape[0], hi)
         per = int(np.prod(a.shape[1:])) * itemsize
         return max(0, hi - lo) * per
-    if any(k in EMBED_KEYS for k in keys):
-        return int(np.prod(a.shape)) * itemsize if include_embed else 0
-    is_head = any(k in ("proj", "pred") for k in keys)
-    if is_head:
-        return int(np.prod(a.shape)) * itemsize if include_heads else 0
-    # final_ln / shared_attn / misc encoder-side leaves travel with the
-    # encoder whenever any stage moves.
-    return int(np.prod(a.shape)) * itemsize if include_embed else 0
+    if kind == "embed":
+        return full if include_embed else 0
+    if kind == "head":
+        return full if include_heads else 0
+    # extra leaves (final_ln / shared_attn / conv stubs) travel with the
+    # encoder whenever any stage moves — they are trained every round
+    # (see masks.stage_update_mask), so both directions always carry them.
+    return full
 
 
 def partial_bytes(params, stage_range, *, include_embed=True,
@@ -46,13 +51,27 @@ def partial_bytes(params, stage_range, *, include_embed=True,
     return total
 
 
+def plan_payloads(plan) -> dict:
+    """Per-direction payload membership for a ``RoundPlan``: maps
+    ``download``/``upload`` to ``(stage_range, include_embed)``.
+
+    Download carries the embedding side only when the range starts at the
+    input (``lo == 0``): otherwise the client's cached prefix is current.
+    Upload carries it only when the client actually trained it
+    (``active_from == 0`` — the condition ``stage_update_mask`` uses), not
+    the historical ``sub_layers == stage`` check, which was vacuously true
+    for every staged schedule. Shared with the transport so analytic and
+    measured bytes count the same tensors.
+    """
+    return {
+        "download": (plan.download_stages, plan.download_stages[0] == 0),
+        "upload": (plan.upload_stages, plan.active_from == 0),
+    }
+
+
 def round_comm_bytes(params, plan, *, include_heads=True) -> dict:
     """Bytes for one client in one round under ``plan`` (a RoundPlan)."""
-    down = partial_bytes(params, plan.download_stages,
-                         include_embed=(plan.download_stages[0] == 0),
-                         include_heads=include_heads)
-    up = partial_bytes(params, plan.upload_stages,
-                       include_embed=(plan.upload_stages[0] == 0
-                                      and plan.sub_layers == plan.stage),
-                       include_heads=include_heads)
-    return {"download": down, "upload": up}
+    payloads = plan_payloads(plan)
+    return {d: partial_bytes(params, rng, include_embed=emb,
+                             include_heads=include_heads)
+            for d, (rng, emb) in payloads.items()}

@@ -11,6 +11,15 @@ clients one at a time (the numerical reference), ``vmap`` stacks the
 sampled clients on a leading axis and runs the whole round — local steps
 and FedAvg — as one jit'd program. The stage schedule, LR, calibration and
 comm-accounting logic here is shared by both engines unchanged.
+
+Every download and upload routes through the wire transport
+(``repro.federated.transport``): the round plan's stage payload is packed
+into flat buffers, pushed through the configured compression codec, and
+training/aggregation consume the *decoded* payloads, so codec error
+propagates realistically. ``FLHistory`` records both the analytic byte
+counts (``comm.round_comm_bytes``) and the measured wire bytes; with the
+fp32 identity codec the two are equal and training is bit-identical to
+handing pytrees around directly.
 """
 from __future__ import annotations
 
@@ -24,6 +33,7 @@ from repro.core import schedule as sched
 from repro.core import ssl as ssl_mod
 from repro.federated import comm, server
 from repro.federated import engine as engine_mod
+from repro.federated import transport as transport_mod
 from repro.optim import make_optimizer
 from repro.optim.schedules import learning_rate, scaled_base_lr
 
@@ -32,22 +42,39 @@ from repro.optim.schedules import learning_rate, scaled_base_lr
 class FLHistory:
     loss: List[float] = field(default_factory=list)
     round_stage: List[int] = field(default_factory=list)
+    # analytic per-client byte counts (leaf shapes x round plan, comm.py)
     download_bytes: List[int] = field(default_factory=list)
     upload_bytes: List[int] = field(default_factory=list)
+    # measured per-client wire bytes: size of the arrays the transport
+    # codec actually put on the wire this round
+    wire_download_bytes: List[int] = field(default_factory=list)
+    wire_upload_bytes: List[int] = field(default_factory=list)
 
     @property
     def total_comm(self) -> int:
         return sum(self.download_bytes) + sum(self.upload_bytes)
 
+    @property
+    def total_wire(self) -> int:
+        return sum(self.wire_download_bytes) + sum(self.wire_upload_bytes)
+
+    @property
+    def compression_ratio(self) -> float:
+        """Measured compression: analytic (uncompressed) bytes over wire
+        bytes. 1.0 for the identity codec."""
+        return self.total_comm / max(1, self.total_wire)
+
 
 def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                aux_images=None, key=None, encoder=None, image_size: int = 32,
-               log=None, engine: str = "sequential") -> tuple:
+               log=None, engine: str = "sequential",
+               codec: str = "fp32") -> tuple:
     """Run the FL process; returns (final_state, FLHistory).
 
     images: (n, H, W, 3) pooled training pool; client_indices: list of index
     arrays (one per client); aux_images: D_g for server calibration;
-    engine: "sequential" (reference) or "vmap" (one dispatch per round).
+    engine: "sequential" (reference) or "vmap" (one dispatch per round);
+    codec: wire compression (transport.CODECS — fp32/fp16/bf16/int8/topk).
     """
     key = key if key is not None else jax.random.PRNGKey(fl.seed)
     if encoder is None:
@@ -59,9 +86,11 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
     base_lr = scaled_base_lr(train_cfg.base_lr, train_cfg.batch_size)
     hist = FLHistory()
 
+    wire = transport_mod.Transport(codec, include_heads=fl.include_heads)
     eng = engine_mod.make_engine(
         engine, encoder=encoder, ssl_cfg=ssl_cfg, opt=opt, fl=fl,
-        train_cfg=train_cfg, images=images, client_indices=client_indices)
+        train_cfg=train_cfg, images=images, client_indices=client_indices,
+        transport=wire)
 
     calib_cache: Dict[int, Any] = {}
 
@@ -90,7 +119,10 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
         key, ks = jax.random.split(key)
         participants = server.sample_clients(ks, fl.num_clients,
                                              fl.clients_per_round)
-        global_enc = (jax.tree.map(jnp.copy, state["online"]["enc"])
+        # download direction: clients (and the alignment loss's global
+        # model) see the wire-decoded broadcast, not the server pytree
+        dstate, down = server.broadcast_download(state, plan, wire)
+        global_enc = (jax.tree.map(jnp.copy, dstate["online"]["enc"])
                       if plan.align else None)
         # per-participant keys are split here, identically for both
         # engines, so the main RNG chain (and the calibration key below)
@@ -99,8 +131,9 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
         for _ in participants:
             key, kc = jax.random.split(key)
             client_keys.append(kc)
-        new_online, losses = eng.run_round(
-            state, plan, participants, client_keys, lr, global_enc)
+        new_online, losses, up = eng.run_round(
+            dstate, plan, participants, client_keys, lr, global_enc,
+            server_online=state["online"])
         state = {**state, "online": new_online}
         if plan.server_calibrate and aux_images is not None:
             key, kg = jax.random.split(key)
@@ -108,13 +141,18 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                 state, aux_images, get_calib(plan.sub_layers), opt,
                 epochs=fl.server_epochs, batch_size=train_cfg.batch_size,
                 key=kg, lr=lr)
-        cb = comm.round_comm_bytes(state["online"], plan)
+        cb = comm.round_comm_bytes(state["online"], plan,
+                                   include_heads=fl.include_heads)
         hist.loss.append(sum(losses) / max(1, len(losses)))
         hist.round_stage.append(plan.stage)
         hist.download_bytes.append(cb["download"])
         hist.upload_bytes.append(cb["upload"])
+        hist.wire_download_bytes.append(down["wire_bytes"])
+        hist.wire_upload_bytes.append(up["wire_bytes"])
         if log:
             log(f"round {plan.round_idx + 1}/{fl.rounds} stage {plan.stage} "
                 f"loss {hist.loss[-1]:.4f} lr {lr:.2e} "
-                f"down {cb['download'] / 1e6:.2f}MB up {cb['upload'] / 1e6:.2f}MB")
+                f"down {cb['download'] / 1e6:.2f}MB "
+                f"up {cb['upload'] / 1e6:.2f}MB "
+                f"wire {(down['wire_bytes'] + up['wire_bytes']) / 1e6:.2f}MB")
     return state, hist

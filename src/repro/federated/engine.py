@@ -19,6 +19,15 @@ resulting batch indices / per-step keys into the compiled program, so both
 engines consume identical data in identical order; ragged shards are
 padded to the longest client and padded steps are masked to a no-op.
 See docs/engine.md.
+
+Uploads route through the wire transport (``repro.federated.transport``)
+in both engines: each client's result is packed into the round plan's
+stage payload, encoded/decoded by the configured codec, and FedAvg
+consumes the *decoded* trees reassembled onto the server's model. In the
+vmap engine that whole path — pack, codec, error-feedback residual
+update, FedAvg — is vmapped over clients inside the same jit'd round
+program. With the identity (fp32) codec the round is bit-identical to
+pre-transport behavior. See docs/transport.md.
 """
 from __future__ import annotations
 
@@ -31,6 +40,7 @@ import numpy as np
 
 from repro.data.partition import stack_shards
 from repro.federated import aggregate, client as client_mod
+from repro.federated import transport as transport_mod
 
 ENGINES = ("sequential", "vmap")
 
@@ -39,26 +49,37 @@ def _pool_len(pool) -> int:
     return jax.tree.leaves(pool)[0].shape[0]
 
 
-def build_round_program(client_init, client_step, extract):
+def build_round_program(client_init, client_step, extract,
+                        wire_transform=None):
     """Compile a full FL round into one jit'd program.
 
     client_init(broadcast) -> carry          (per-client local state)
     client_step(carry, batch, key, lr, broadcast) -> (carry, loss)
     extract(carry) -> pytree to aggregate
+    wire_transform(stacked_outs, broadcast, residuals)
+        -> (decoded_stacked, new_residuals)  (optional transport hook)
 
     The returned function has signature
 
         round(broadcast, shards, batch_idx, step_keys, valid, weights, lr)
           -> (aggregated_tree, (C,) last-step losses)
 
-    where ``broadcast`` is shared across clients (global state, alignment
+    or, when ``wire_transform`` is given, an extra trailing ``residuals``
+    argument and result: each client's extracted tree is packed onto the
+    wire, encoded/decoded by the transport codec (threading per-client
+    error-feedback residuals through the program), and FedAvg consumes the
+    *decoded* trees — the codec's quantization/sparsification error
+    propagates into the aggregated model exactly as it would in a real
+    deployment.
+
+    ``broadcast`` is shared across clients (global state, alignment
     context), every leaf of ``shards`` is ``(C, n_max, ...)``, ``batch_idx``
     is ``(C, T, B)`` shard-local gather indices, ``step_keys`` is
     ``(C, T, 2)`` and ``valid`` is ``(C, T)``. Steps with ``valid=False``
     still execute (uniform trip count under vmap) but their state update is
     discarded, so padding never changes the result.
     """
-    def round_fn(broadcast, shards, batch_idx, step_keys, valid, weights, lr):
+    def run_clients(broadcast, shards, batch_idx, step_keys, valid, lr):
         def one_client(shard, idx, keys, ok):
             def body(carry, xs):
                 c, last = carry
@@ -73,9 +94,22 @@ def build_round_program(client_init, client_step, extract):
             (c, last), _ = jax.lax.scan(body, carry0, (idx, keys, ok))
             return extract(c), last
 
-        outs, losses = jax.vmap(one_client)(shards, batch_idx, step_keys,
-                                            valid)
-        return aggregate.fedavg_stacked(outs, weights), losses
+        return jax.vmap(one_client)(shards, batch_idx, step_keys, valid)
+
+    if wire_transform is None:
+        def round_fn(broadcast, shards, batch_idx, step_keys, valid,
+                     weights, lr):
+            outs, losses = run_clients(broadcast, shards, batch_idx,
+                                       step_keys, valid, lr)
+            return aggregate.fedavg_stacked(outs, weights), losses
+    else:
+        def round_fn(broadcast, shards, batch_idx, step_keys, valid,
+                     weights, lr, residuals):
+            outs, losses = run_clients(broadcast, shards, batch_idx,
+                                       step_keys, valid, lr)
+            decoded, new_res = wire_transform(outs, broadcast, residuals)
+            return (aggregate.fedavg_stacked(decoded, weights), losses,
+                    new_res)
 
     return jax.jit(round_fn)
 
@@ -86,11 +120,12 @@ class SequentialEngine:
     name = "sequential"
 
     def __init__(self, *, encoder, ssl_cfg, opt, fl, train_cfg, images,
-                 client_indices):
+                 client_indices, transport=None):
         self.encoder, self.ssl_cfg, self.opt = encoder, ssl_cfg, opt
         self.fl, self.train_cfg = fl, train_cfg
         self.images, self.client_indices = images, client_indices
         self.counts = [len(ix) for ix in client_indices]
+        self.transport = transport or transport_mod.Transport("fp32")
         self._steps: Dict[tuple, object] = {}
 
     def _step(self, plan):
@@ -104,7 +139,7 @@ class SequentialEngine:
         return self._steps[sig]
 
     def run_round(self, state, plan, participants, client_keys, lr,
-                  global_enc):
+                  global_enc, server_online):
         step_fn = self._step(plan)
         outs, losses = [], []
         for i, kc in zip(participants, client_keys):
@@ -116,7 +151,10 @@ class SequentialEngine:
             outs.append(online_i)
             losses.append(float(m["loss"]))
         w = aggregate.client_weights([self.counts[i] for i in participants])
-        return aggregate.fedavg(outs, w), losses
+        new_online, stats = self.transport.aggregate_uploads(
+            server_online, outs, participants, plan, w,
+            ref_online=state["online"])
+        return new_online, losses, stats
 
 
 class VmapEngine:
@@ -125,9 +163,10 @@ class VmapEngine:
     name = "vmap"
 
     def __init__(self, *, encoder, ssl_cfg, opt, fl, train_cfg, images,
-                 client_indices):
+                 client_indices, transport=None):
         self.encoder, self.ssl_cfg, self.opt = encoder, ssl_cfg, opt
         self.fl, self.train_cfg = fl, train_cfg
+        self.transport = transport or transport_mod.Transport("fp32")
         self.counts = [len(ix) for ix in client_indices]
         bs = train_cfg.batch_size
         if min(self.counts) < bs:
@@ -155,9 +194,9 @@ class VmapEngine:
         """(C, n_max) pool indices -> client-stacked shard data."""
         return jax.tree.map(lambda a: a[idx], self._pool)
 
-    def _program(self, plan):
+    def _program(self, plan, spec):
         sig = (plan.sub_layers, plan.active_from, plan.align,
-               plan.depth_dropout)
+               plan.depth_dropout, spec.sig)
         if sig not in self._programs:
             step = client_mod.make_local_step(
                 self.encoder, self.ssl_cfg, self.opt,
@@ -182,12 +221,15 @@ class VmapEngine:
                 st, os_, m = step(st, os_, batch, key, lr, bc["global_enc"])
                 return (st, os_), m["loss"]
 
+            wire = self.transport.make_wire_transform(spec)
             self._programs[sig] = build_round_program(
-                client_init, client_step, lambda c: c[0]["online"])
+                client_init, client_step, lambda c: c[0]["online"],
+                wire_transform=lambda outs, bc, res: wire(
+                    outs, bc["server"], bc["state"]["online"], res))
         return self._programs[sig]
 
     def run_round(self, state, plan, participants, client_keys, lr,
-                  global_enc):
+                  global_enc, server_online):
         bs = self.train_cfg.batch_size
         idxs, keys, valids = [], [], []
         for i, kc in zip(participants, client_keys):
@@ -206,11 +248,16 @@ class VmapEngine:
             shards = self._gather(self._pad_idx[pidx])
             w = aggregate.client_weights(
                 [self.counts[i] for i in participants])
-        new_online, losses = self._program(plan)(
-            {"state": state, "global_enc": global_enc}, shards,
+        spec = self.transport.plan_specs(server_online, plan)["upload"]
+        residuals = self.transport.gather_residuals(participants, spec)
+        new_online, losses, new_res = self._program(plan, spec)(
+            {"state": state, "global_enc": global_enc,
+             "server": server_online}, shards,
             jnp.stack(idxs), jnp.stack(keys),
-            jnp.asarray(np.stack(valids)), w, jnp.float32(lr))
-        return new_online, [float(x) for x in np.asarray(losses)]
+            jnp.asarray(np.stack(valids)), w, jnp.float32(lr), residuals)
+        self.transport.store_residuals(participants, spec, new_res)
+        return (new_online, [float(x) for x in np.asarray(losses)],
+                self.transport.upload_stats(spec))
 
 
 def make_engine(name: str, **kw):

@@ -15,26 +15,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-STACKED_KEYS = ("blocks", "moe_blocks", "mlstm", "slstm", "enc_blocks",
-                "dec_blocks")
-EMBED_KEYS = ("embed", "patch", "pos", "cls", "lm_head")
-
-
-def _path_keys(path):
-    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+from repro.federated.leaves import classify_leaf
 
 
 def stage_update_mask(params, sub_layers: int, active_from: int):
     """Mask pytree matching ``params``: 1.0 = update, 0.0 = frozen."""
     def leaf_mask(path, a):
-        keys = _path_keys(path)
-        stacked = next((k for k in keys if k in STACKED_KEYS), None)
-        if stacked is not None:
+        kind = classify_leaf(path)
+        if kind == "stacked":
             n = a.shape[0]
             idx = jnp.arange(n)
             m = ((idx >= active_from) & (idx < sub_layers)).astype(jnp.float32)
             return m.reshape((n,) + (1,) * (a.ndim - 1))
-        if any(k in EMBED_KEYS for k in keys):
+        if kind == "embed":
             return jnp.float32(1.0 if active_from == 0 else 0.0)
         return jnp.float32(1.0)   # heads, final_ln, shared_attn, conv stubs
 

@@ -55,6 +55,23 @@ def server_calibrate(state, aux_images, step_fn, opt, *, epochs: int,
     return state
 
 
+def broadcast_download(state, plan, transport):
+    """Server -> clients (paper Fig. 1 step i): push the round plan's
+    download payload over the wire transport and return the state clients
+    actually train from, plus measured wire stats.
+
+    With the identity codec the returned tree is bit-identical to
+    ``state``; with a lossy codec the decoded download is what every client
+    (and the alignment loss's global model) sees, so wire compression error
+    reaches local training exactly as it would in a real deployment. Leaves
+    outside the payload keep the server values — they stand in for the
+    client's cached copy from earlier rounds, which the plan says is still
+    current.
+    """
+    view, stats = transport.broadcast(state["online"], plan)
+    return {**state, "online": view}, stats
+
+
 def begin_stage(state, stage: int, *, weight_transfer: bool):
     """Stage-transition housekeeping: L_{s-1} -> L_s weight transfer."""
     if not weight_transfer or stage < 2:

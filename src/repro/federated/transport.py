@@ -1,0 +1,499 @@
+"""Wire-level transport: real stage payloads + pluggable compression codecs.
+
+The analytic accounting in ``repro.federated.comm`` *predicts* how many
+bytes a round moves; this module actually moves them. A round plan's stage
+range is sliced out of every stacked/embed/head leaf into one flat
+contiguous fp32 buffer (``pack_stage_payload``), pushed through a codec
+(cast, quantize or sparsify — ``encode``/``decode``), and scattered back
+into a model tree (``unpack_stage_payload``). Both directions of the FL
+loop route through here:
+
+  download   server tree -> payload -> wire -> decoded payload -> the tree
+             clients actually train from (codec error reaches training).
+  upload     each client's trained tree -> payload -> wire (per-client
+             error-feedback residual for sparsifying codecs) -> decoded
+             payload -> reassembled client tree; FedAvg then consumes the
+             *decoded* trees, never the in-memory originals.
+
+Codecs (``make_codec``):
+
+  fp32        identity. Training is bit-identical to handing pytrees
+              around directly, and wire bytes equal the analytic
+              ``comm.round_comm_bytes`` numbers exactly.
+  fp16/bf16   cast-on-the-wire, 2x compression.
+  int8        per-channel symmetric quantization (scale = amax/127 over
+              the last axis' channels; per-tensor for vectors) with fp32
+              dequant scales on the wire, ~3.9x.
+  topk[:f]    magnitude top-k sparsification keeping fraction ``f``
+              (default 0.1) of entries as (int32 index, fp32 value)
+              pairs. Sparsifies *deltas against a reference both ends
+              hold* (uploads: the downloaded model, with per-client
+              error-feedback residuals carried across rounds — Seide et
+              al. 2014 / Karimireddy et al. 2019; downloads: a
+              server-side mirror of the clients' copy, densely re-synced
+              whenever the payload layout changes), so dropped mass is
+              delayed, never lost.
+
+Payload membership (which leaves travel, per direction) is the shared
+``classify_leaf``/``comm.plan_payloads`` contract, so measured and analytic
+bytes count the same tensors. All pack/encode/decode/unpack functions are
+pure JAX: the vectorized engine vmaps them over the client axis inside its
+single jit'd round program. See docs/transport.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federated import aggregate
+from repro.federated.leaves import classify_leaf, path_keys
+
+WIRE_DTYPE = jnp.float32          # payload element dtype before encoding
+CODECS = ("fp32", "fp16", "bf16", "int8", "topk")
+
+
+# ---------------------------------------------------------------------------
+# payload spec: which pieces of the tree travel, and where they land in the
+# flat buffer — static per (tree shapes, stage range, include flags)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LeafSlot:
+    path: Tuple[str, ...]     # key path into the params tree
+    kind: str                 # stacked | embed | head | extra
+    lo: int                   # stacked: first stage row shipped
+    hi: int                   # stacked: one past the last stage row
+    shape: Tuple[int, ...]    # shape of the shipped piece
+    offset: int               # start element in the flat payload
+    size: int                 # element count of the shipped piece
+
+
+@dataclass(frozen=True)
+class PayloadSpec:
+    slots: Tuple[LeafSlot, ...]
+    total: int                # flat payload length in elements
+    sig: Tuple                # hashable identity (for caches / residuals)
+
+    @property
+    def payload_bytes(self) -> int:
+        """Uncompressed (fp32) payload size — the codec-free baseline."""
+        return self.total * jnp.dtype(WIRE_DTYPE).itemsize
+
+
+def tree_signature(params) -> Tuple:
+    """Hashable (path, shape, dtype) fingerprint of a params tree."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return tuple((path_keys(p), tuple(a.shape), str(a.dtype))
+                 for p, a in flat)
+
+
+def build_payload_spec(params, stage_range, *, include_embed: bool,
+                       include_heads: bool) -> PayloadSpec:
+    """Walk ``params`` (concrete or ``eval_shape`` abstract) and lay out the
+    payload: stacked leaves contribute their ``[lo, hi)`` stage rows, embed
+    and head leaves contribute whole tensors per the flags, extra leaves
+    (final norm, shared blocks) always travel."""
+    lo_req, hi_req = int(stage_range[0]), int(stage_range[1])
+    slots: List[LeafSlot] = []
+    offset = 0
+    for path, a in jax.tree_util.tree_flatten_with_path(params)[0]:
+        kind = classify_leaf(path)
+        if kind == "stacked":
+            lo, hi = max(0, lo_req), min(a.shape[0], hi_req)
+            if hi <= lo:
+                continue
+            shape = (hi - lo,) + tuple(a.shape[1:])
+        elif (kind == "embed" and not include_embed) or \
+                (kind == "head" and not include_heads):
+            continue
+        else:
+            lo, hi = 0, 0
+            shape = tuple(a.shape)
+        size = int(np.prod(shape))
+        slots.append(LeafSlot(path_keys(path), kind, lo, hi, shape,
+                              offset, size))
+        offset += size
+    sig = (tuple((s.path, s.lo, s.hi, s.shape) for s in slots), offset)
+    return PayloadSpec(tuple(slots), offset, sig)
+
+
+def pack_stage_payload(params, spec: PayloadSpec):
+    """Slice the spec'd pieces out of ``params`` into one flat fp32 buffer."""
+    by_path = {path_keys(p): a
+               for p, a in jax.tree_util.tree_flatten_with_path(params)[0]}
+    parts = []
+    for s in spec.slots:
+        a = by_path[s.path]
+        if s.kind == "stacked":
+            a = a[s.lo:s.hi]
+        parts.append(a.astype(WIRE_DTYPE).ravel())
+    if not parts:
+        return jnp.zeros((0,), WIRE_DTYPE)
+    return jnp.concatenate(parts)
+
+
+def unpack_stage_payload(base, flat, spec: PayloadSpec):
+    """Scatter a flat payload back into ``base``: stacked rows are written
+    into their stage range, whole-tensor slots replace the base leaf, and
+    leaves outside the spec keep the base value (the receiver's own copy —
+    the server's model for uploads, the client's cached prefix for
+    downloads)."""
+    by_path = {s.path: s for s in spec.slots}
+
+    def leaf(path, a):
+        s = by_path.get(path_keys(path))
+        if s is None:
+            return a
+        seg = jax.lax.dynamic_slice_in_dim(flat, s.offset, s.size)
+        seg = seg.reshape(s.shape).astype(a.dtype)
+        if s.kind == "stacked":
+            return a.at[s.lo:s.hi].set(seg)
+        return seg
+
+    return jax.tree_util.tree_map_with_path(leaf, base)
+
+
+# ---------------------------------------------------------------------------
+# codecs: pure-JAX encode/decode over the flat payload
+# ---------------------------------------------------------------------------
+class Fp32Codec:
+    """Identity codec — the uncompressed reference wire format."""
+
+    name = "fp32"
+    error_feedback = False
+    delta = False
+
+    def encode(self, flat, spec):
+        return {"q": flat}
+
+    def decode(self, wire, spec):
+        return wire["q"]
+
+
+class CastCodec:
+    """Cast-on-the-wire: fp16 or bf16 payload, decoded back to fp32."""
+
+    error_feedback = False
+    delta = False
+
+    def __init__(self, name: str):
+        self.name = name
+        self.dtype = jnp.float16 if name == "fp16" else jnp.bfloat16
+
+    def encode(self, flat, spec):
+        return {"q": flat.astype(self.dtype)}
+
+    def decode(self, wire, spec):
+        return wire["q"].astype(WIRE_DTYPE)
+
+
+def _int8_channels(slot: LeafSlot) -> int:
+    """Channels of a slot for per-channel scales: the last axis when the
+    slot is a proper matrix/stack (>= 4 rows), else one per-tensor scale."""
+    if len(slot.shape) >= 2:
+        ch = slot.shape[-1]
+        if slot.size // max(1, ch) >= 4:
+            return ch
+    return 1
+
+
+class Int8Codec:
+    """Symmetric per-channel int8: q = round(x / s), s = amax_channel/127.
+
+    The wire carries the int8 payload plus one fp32 dequant scale per
+    channel (per tensor for vectors), ~3.9x smaller than fp32."""
+
+    name = "int8"
+    error_feedback = False
+    delta = False
+
+    def encode(self, flat, spec):
+        qs, scales = [], []
+        for s in spec.slots:
+            seg = jax.lax.dynamic_slice_in_dim(flat, s.offset, s.size)
+            ch = _int8_channels(s)
+            seg2 = seg.reshape(-1, ch)
+            amax = jnp.max(jnp.abs(seg2), axis=0)
+            scale = jnp.maximum(amax, 1e-12) / 127.0
+            q = jnp.clip(jnp.round(seg2 / scale), -127, 127).astype(jnp.int8)
+            qs.append(q.ravel())
+            scales.append(scale)
+        return {"q": jnp.concatenate(qs), "scale": jnp.concatenate(scales)}
+
+    def decode(self, wire, spec):
+        outs, so = [], 0
+        for s in spec.slots:
+            ch = _int8_channels(s)
+            q = jax.lax.dynamic_slice_in_dim(wire["q"], s.offset, s.size)
+            scale = jax.lax.dynamic_slice_in_dim(wire["scale"], so, ch)
+            so += ch
+            outs.append((q.reshape(-1, ch).astype(WIRE_DTYPE)
+                         * scale).ravel())
+        return jnp.concatenate(outs)
+
+
+class TopKCodec:
+    """Magnitude top-k sparsification of *deltas*, with error feedback.
+
+    Keeps the ``fraction`` largest-|x| entries as (int32 index, fp32 value)
+    pairs. Unlike the cast/quantize codecs, top-k is meaningless on raw
+    weights (dropping 90% of a model's parameters destroys it), so
+    ``delta=True`` makes the transport sparsify *differences against a
+    reference both ends hold*: uploads ship (trained - downloaded), with
+    ``error_feedback=True`` adding each client's previously dropped mass
+    back into the next round's payload (Seide et al. 2014; Karimireddy et
+    al. 2019); downloads ship (model - server-side mirror of what clients
+    already hold), with a dense re-sync whenever the payload layout
+    changes (stage transitions)."""
+
+    error_feedback = True
+    delta = True
+
+    def __init__(self, fraction: float = 0.1):
+        if not (0.0 < fraction <= 1.0):
+            raise ValueError(f"topk fraction must be in (0, 1]: {fraction}")
+        self.fraction = fraction
+        self.name = f"topk:{fraction:g}"
+
+    def k_for(self, spec: PayloadSpec) -> int:
+        return max(1, min(spec.total, int(round(spec.total * self.fraction))))
+
+    def encode(self, flat, spec):
+        k = self.k_for(spec)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return {"idx": idx.astype(jnp.int32), "val": flat[idx]}
+
+    def decode(self, wire, spec):
+        return jnp.zeros((spec.total,), WIRE_DTYPE).at[wire["idx"]].set(
+            wire["val"])
+
+
+def make_codec(name: str):
+    """Codec registry. ``topk`` takes an optional fraction: ``topk:0.05``."""
+    if name == "fp32":
+        return Fp32Codec()
+    if name in ("fp16", "bf16"):
+        return CastCodec(name)
+    if name == "int8":
+        return Int8Codec()
+    if name == "topk" or name.startswith("topk:"):
+        frac = float(name.split(":", 1)[1]) if ":" in name else 0.1
+        return TopKCodec(frac)
+    raise ValueError(f"unknown codec '{name}'; one of {CODECS} "
+                     f"(topk takes an optional fraction, e.g. topk:0.05)")
+
+
+def wire_nbytes(wire_shapes) -> int:
+    """Byte size of a wire message (a pytree of arrays / ShapeDtypeStructs)."""
+    return int(sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+                   for a in jax.tree.leaves(wire_shapes)))
+
+
+# ---------------------------------------------------------------------------
+# transport: spec/program caches, residual store, measured byte accounting
+# ---------------------------------------------------------------------------
+class Transport:
+    """One per FL run. Owns the codec, per-direction payload specs, the
+    per-client error-feedback residuals, and the measured wire-byte stats
+    the driver folds into ``FLHistory``."""
+
+    def __init__(self, codec="fp32", *, include_heads: bool = True):
+        self.codec = make_codec(codec) if isinstance(codec, str) else codec
+        self.include_heads = include_heads
+        self._specs: Dict[Tuple, PayloadSpec] = {}
+        self._wire_bytes: Dict[Tuple, int] = {}
+        self._roundtrips: Dict[Tuple, object] = {}
+        self._resid: Dict[Tuple, Tuple[Tuple, object]] = {}
+        self._mirror: Optional[Tuple[Tuple, object]] = None
+
+    # -- specs --------------------------------------------------------------
+    def spec(self, params, stage_range, include_embed: bool) -> PayloadSpec:
+        key = (tree_signature(params), (int(stage_range[0]),
+                                        int(stage_range[1])),
+               include_embed, self.include_heads)
+        if key not in self._specs:
+            self._specs[key] = build_payload_spec(
+                params, stage_range, include_embed=include_embed,
+                include_heads=self.include_heads)
+        return self._specs[key]
+
+    def plan_specs(self, params, plan) -> Dict[str, PayloadSpec]:
+        """Download/upload payload specs for a RoundPlan — membership rules
+        shared with the analytic accounting (``comm.plan_payloads``)."""
+        from repro.federated import comm
+        return {d: self.spec(params, rng, include_embed=emb)
+                for d, (rng, emb) in comm.plan_payloads(plan).items()}
+
+    def wire_bytes(self, spec: PayloadSpec) -> int:
+        """Measured wire size: byte count of the arrays the codec actually
+        emits for this payload (via ``eval_shape`` on the real encoder)."""
+        key = (spec.sig,)
+        if key not in self._wire_bytes:
+            shapes = jax.eval_shape(
+                lambda f: self.codec.encode(f, spec),
+                jax.ShapeDtypeStruct((spec.total,), WIRE_DTYPE))
+            self._wire_bytes[key] = wire_nbytes(shapes)
+        return self._wire_bytes[key]
+
+    # -- the wire round-trip ------------------------------------------------
+    def _upload_one(self, out, base, ref_flat, res, spec: PayloadSpec):
+        """One client's upload path, pure JAX: pack ``out``, subtract the
+        shared reference for delta codecs, add the client's error-feedback
+        residual, encode/decode, and scatter the reconstructed payload into
+        ``base`` (the server's tree). Returns (decoded tree, new residual).
+        """
+        codec = self.codec
+        flat = pack_stage_payload(out, spec)
+        x = flat - ref_flat if codec.delta else flat
+        if codec.error_feedback:
+            x = x + res
+        dec = codec.decode(codec.encode(x, spec), spec)
+        new_res = x - dec if codec.error_feedback else res
+        full = ref_flat + dec if codec.delta else dec
+        return unpack_stage_payload(base, full, spec), new_res
+
+    def _upload_fn(self, spec: PayloadSpec):
+        """jit'd (base, ref_flat, src, residual) -> (decoded tree, new
+        residual) for the sequential engine's per-client loop; the shared
+        reference is packed once per round, not once per client."""
+        key = ("up", spec.sig)
+        if key not in self._roundtrips:
+            self._roundtrips[key] = jax.jit(
+                lambda base, ref_flat, src, res: self._upload_one(
+                    src, base, ref_flat, res, spec))
+        return self._roundtrips[key]
+
+    def _pack_fn(self, spec: PayloadSpec):
+        key = ("pack", spec.sig)
+        if key not in self._roundtrips:
+            self._roundtrips[key] = jax.jit(
+                lambda tree: pack_stage_payload(tree, spec))
+        return self._roundtrips[key]
+
+    def make_wire_transform(self, spec: PayloadSpec):
+        """Pure function for the vectorized engine: (client-stacked trees,
+        unbatched server base tree, unbatched download-reference tree,
+        (C, n) residuals) -> (decoded stacked trees, new residuals).
+        vmap-ed over clients inside the jit'd round."""
+        def transform(stacked_outs, base, ref, residuals):
+            ref_flat = pack_stage_payload(ref, spec)
+            return jax.vmap(
+                lambda out, res: self._upload_one(out, base, ref_flat, res,
+                                                  spec)
+            )(stacked_outs, residuals)
+
+        return transform
+
+    # -- error-feedback residuals -------------------------------------------
+    def residual_shape(self, spec: PayloadSpec) -> Tuple[int, ...]:
+        """(n,) when the codec carries error feedback, else a (1,) dummy."""
+        return (spec.total,) if self.codec.error_feedback else (1,)
+
+    def gather_residuals(self, client_ids, spec: PayloadSpec):
+        """(C, n) residual rows for ``client_ids``; zeros for new clients or
+        when the payload layout changed (stage transition resets EF)."""
+        shape = self.residual_shape(spec)
+        rows = []
+        for cid in client_ids:
+            held = self._resid.get(cid)
+            if held is not None and held[0] == spec.sig:
+                rows.append(held[1])
+            else:
+                rows.append(jnp.zeros(shape, WIRE_DTYPE))
+        return jnp.stack(rows)
+
+    def store_residuals(self, client_ids, spec: PayloadSpec, stacked):
+        if not self.codec.error_feedback:
+            return
+        for i, cid in enumerate(client_ids):
+            self._resid[cid] = (spec.sig, stacked[i])
+
+    # -- driver-facing operations -------------------------------------------
+    def _bcast_fn(self, spec: PayloadSpec):
+        """jit'd non-delta broadcast: (online) -> decoded client view."""
+        key = ("down", spec.sig)
+        if key not in self._roundtrips:
+            codec = self.codec
+
+            @jax.jit
+            def fn(online):
+                flat = pack_stage_payload(online, spec)
+                dec = codec.decode(codec.encode(flat, spec), spec)
+                return unpack_stage_payload(online, dec, spec)
+
+            self._roundtrips[key] = fn
+        return self._roundtrips[key]
+
+    def _bcast_delta_fn(self, spec: PayloadSpec):
+        """jit'd delta broadcast: (online, mirror flat) -> (client view,
+        new mirror). The mirror is the server's record of what clients
+        already hold; sparsifying (model - mirror) and advancing the
+        mirror by the *decoded* delta is error feedback in itself — what a
+        round drops stays in the next round's delta."""
+        key = ("down_delta", spec.sig)
+        if key not in self._roundtrips:
+            codec = self.codec
+
+            @jax.jit
+            def fn(online, mirror):
+                flat = pack_stage_payload(online, spec)
+                dec = codec.decode(codec.encode(flat - mirror, spec), spec)
+                new_mirror = mirror + dec
+                return unpack_stage_payload(online, new_mirror,
+                                            spec), new_mirror
+
+            self._roundtrips[key] = fn
+        return self._roundtrips[key]
+
+    def broadcast(self, online, plan):
+        """Server -> clients: route the download payload over the wire and
+        return (the tree clients train from, measured download stats).
+
+        Delta codecs (topk) need a shared reference: the first round under
+        a payload layout (run start / stage transition) is a dense fp32
+        re-sync that seeds the mirror; later rounds ship the sparsified
+        difference against it."""
+        spec = self.plan_specs(online, plan)["download"]
+        if not self.codec.delta:
+            view = self._bcast_fn(spec)(online)
+            wire = self.wire_bytes(spec)
+        else:
+            held = self._mirror
+            if held is None or held[0] != spec.sig:
+                flat = pack_stage_payload(online, spec)
+                view = unpack_stage_payload(online, flat, spec)
+                self._mirror = (spec.sig, flat)
+                wire = spec.payload_bytes          # dense sync round
+            else:
+                view, mirror = self._bcast_delta_fn(spec)(online, held[1])
+                self._mirror = (spec.sig, mirror)
+                wire = self.wire_bytes(spec)
+        return view, {"wire_bytes": wire,
+                      "payload_bytes": spec.payload_bytes}
+
+    def aggregate_uploads(self, server_online, outs, client_ids, plan,
+                          weights, ref_online=None):
+        """Clients -> server, sequential form: per-client payload -> wire
+        (-> EF residual) -> decoded tree; FedAvg over the decoded trees.
+        ``ref_online`` is the downloaded tree clients started from — the
+        shared reference delta codecs subtract. Returns (aggregated tree,
+        measured per-client upload stats)."""
+        spec = self.plan_specs(server_online, plan)["upload"]
+        ref_online = server_online if ref_online is None else ref_online
+        fn = self._upload_fn(spec)
+        ref_flat = self._pack_fn(spec)(ref_online)
+        res = self.gather_residuals(client_ids, spec)
+        trees, new_res = [], []
+        for out, r in zip(outs, res):
+            tree, nr = fn(server_online, ref_flat, out, r)
+            trees.append(tree)
+            new_res.append(nr)
+        self.store_residuals(client_ids, spec, new_res)
+        return aggregate.fedavg(trees, weights), self.upload_stats(spec)
+
+    def upload_stats(self, spec: PayloadSpec) -> Dict[str, int]:
+        return {"wire_bytes": self.wire_bytes(spec),
+                "payload_bytes": spec.payload_bytes}

@@ -165,7 +165,7 @@ def make_decode_step(cfg):
 # ---------------------------------------------------------------------------
 def make_fl_round_program(cfg, train_cfg, *, mode: str = "train",
                           sub_layers: int = None, active_from: int = None,
-                          align: bool = None):
+                          align: bool = None, wire_transform=None):
     """One jit'd program for an entire LM FL round: every sampled client's
     local steps run as a ``lax.scan`` vmapped over the client axis, with
     FedAvg fused at the end (``repro.federated.engine`` semantics).
@@ -179,6 +179,11 @@ def make_fl_round_program(cfg, train_cfg, *, mode: str = "train",
     (and ``global_params`` when aligning) and every ``shards`` leaf is
     ``(C, n_max, ...)``. Unlike ``make_train_step``, the ``lr`` argument
     is live — each round can pass its scheduled learning rate.
+
+    ``wire_transform`` (optional) is the transport hook forwarded to
+    ``build_round_program``: client results are wire-encoded/decoded before
+    the fused FedAvg, the program takes a trailing ``residuals`` argument
+    and returns updated residuals (see ``repro.federated.transport``).
     """
     from repro.federated.engine import build_round_program
 
@@ -216,5 +221,5 @@ def make_fl_round_program(cfg, train_cfg, *, mode: str = "train",
         p, o, m = step(p, o, batch, bc.get("global_params"), lr)
         return (p, o), m["loss"]
 
-    return build_round_program(client_init, client_step,
-                               lambda c: c[0]), opt
+    return build_round_program(client_init, client_step, lambda c: c[0],
+                               wire_transform=wire_transform), opt

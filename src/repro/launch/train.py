@@ -16,9 +16,14 @@ trains sampled clients one at a time (the numerical reference), ``vmap``
 stacks them on a leading axis and executes each round — all clients' local
 steps plus FedAvg — as a single jit'd program (``repro.federated.engine``).
 
+Both modes route every download/upload through the wire transport
+(``--codec``: fp32 | fp16 | bf16 | int8 | topk[:frac]); see
+docs/transport.md for payload layout and codec semantics.
+
 Example:
   PYTHONPATH=src python -m repro.launch.train --mode vit \
-      --schedule lw_fedssl --rounds 12 --clients 4 --batch 64 --engine vmap
+      --schedule lw_fedssl --rounds 12 --clients 4 --batch 64 \
+      --engine vmap --codec int8
 """
 from __future__ import annotations
 
@@ -37,6 +42,7 @@ from repro.core import ssl as ssl_mod
 from repro.data import iid_partition, dirichlet_partition, synthetic_images
 from repro.data.synthetic import synthetic_tokens
 from repro.federated import aggregate, comm
+from repro.federated import transport as transport_mod
 from repro.federated.driver import run_fedssl
 from repro.federated import eval as fl_eval
 from repro.optim import make_optimizer
@@ -66,9 +72,11 @@ def train_vit(args):
     state, hist = run_fedssl(
         cfg, ssl_cfg, fl, tc, images=images,
         client_indices=[jnp.asarray(i) for i in idx], aux_images=aux,
-        key=key, log=print, engine=args.engine)
+        key=key, log=print, engine=args.engine, codec=args.codec)
     print(f"training done in {time.time() - t0:.1f}s; "
-          f"total comm {hist.total_comm / 1e6:.2f} MB")
+          f"total comm {hist.total_comm / 1e6:.2f} MB analytic, "
+          f"{hist.total_wire / 1e6:.2f} MB on the wire "
+          f"({args.codec}: {hist.compression_ratio:.2f}x)")
     enc = ssl_mod.make_vit_encoder(cfg)
     n_eval = min(args.samples // 2, 512)
     acc = fl_eval.linear_eval(
@@ -128,6 +136,8 @@ def train_lm(args):
         return (b * tc.batch_size) % max(1, len(ix) - tc.batch_size)
 
     use_vmap = args.engine == "vmap"
+    wire = transport_mod.Transport(args.codec)
+    all_clients = list(range(fl.num_clients))
     if use_vmap:
         from repro.data.partition import stack_shards
         from repro.launch.steps import make_fl_round_program
@@ -150,31 +160,46 @@ def train_lm(args):
         step_keys = jnp.zeros((fl.num_clients, T, 2), jnp.uint32)
         round_cache = {}
 
-        def get_round(plan):
-            sig = (plan.sub_layers, plan.active_from, plan.align)
+        def get_round(plan, spec):
+            sig = (plan.sub_layers, plan.active_from, plan.align, spec.sig)
             if sig not in round_cache:
+                wt = wire.make_wire_transform(spec)
                 round_cache[sig] = make_fl_round_program(
                     cfg, tc, sub_layers=plan.sub_layers,
-                    active_from=plan.active_from, align=plan.align)[0]
+                    active_from=plan.active_from, align=plan.align,
+                    wire_transform=lambda outs, bc, res: wt(
+                        outs, bc["server"], bc["params"], res))[0]
             return round_cache[sig]
 
     hist = []
+    wire_mb = 0.0
     for plan in plans:
         if plan.new_stage and fl.weight_transfer:
             params = sched.transfer_model(params, cfg, plan.stage)
         lr = float(learning_rate(plan.round_idx, fl.rounds, base_lr,
                                  tc.lr_schedule))
-        global_params = jax.tree.map(jnp.copy, params) if plan.align else None
+        # both directions route through the wire transport: clients train
+        # from the decoded broadcast, FedAvg consumes decoded uploads
+        dparams, down = wire.broadcast(params, plan)
+        global_params = (jax.tree.map(jnp.copy, dparams) if plan.align
+                         else None)
         if use_vmap:
-            params, lvec = get_round(plan)(
-                {"params": params, "global_params": global_params},
-                stacked, batch_idx, step_keys, valid, w, jnp.float32(lr))
+            spec = wire.plan_specs(params, plan)["upload"]
+            up = wire.upload_stats(spec)
+            res = wire.gather_residuals(all_clients, spec)
+            new_params, lvec, new_res = get_round(plan, spec)(
+                {"params": dparams, "global_params": global_params,
+                 "server": params},
+                stacked, batch_idx, step_keys, valid, w, jnp.float32(lr),
+                res)
+            wire.store_residuals(all_clients, spec, new_res)
+            params = new_params
             losses = [float(x) for x in np.asarray(lvec)]
         else:
             step = get_step(plan)
             outs, losses = [], []
             for ci in range(fl.num_clients):
-                p_i = jax.tree.map(jnp.asarray, params)
+                p_i = jax.tree.map(jnp.asarray, dparams)
                 o_i = opt.init(p_i)
                 ix = shards[ci]
                 nb = max(1, len(ix) // tc.batch_size)
@@ -185,11 +210,15 @@ def train_lm(args):
                                        jnp.float32(lr))
                 outs.append(p_i)
                 losses.append(float(m["loss"]))
-            params = aggregate.fedavg(outs, w)
+            params, up = wire.aggregate_uploads(params, outs, all_clients,
+                                                plan, w, ref_online=dparams)
+        wire_mb += (down["wire_bytes"] + up["wire_bytes"]) / 1e6
         hist.append(sum(losses) / len(losses))
         print(f"round {plan.round_idx + 1}/{fl.rounds} stage {plan.stage} "
-              f"loss {hist[-1]:.4f}")
-    print(f"final loss {hist[-1]:.4f} (start {hist[0]:.4f})")
+              f"loss {hist[-1]:.4f} "
+              f"wire {(down['wire_bytes'] + up['wire_bytes']) / 1e6:.2f}MB")
+    print(f"final loss {hist[-1]:.4f} (start {hist[0]:.4f}); "
+          f"{wire_mb:.2f} MB/client on the wire ({args.codec})")
     return params, hist
 
 
@@ -203,6 +232,11 @@ def main():
                     choices=("sequential", "vmap"),
                     help="round engine: per-client loop (reference) or "
                          "one jit'd vmapped program per round")
+    ap.add_argument("--codec", default="fp32",
+                    help="wire compression codec for downloads/uploads: "
+                         "fp32 (identity), fp16, bf16, int8 (per-channel "
+                         "quantization), topk[:frac] (sparsification with "
+                         "error feedback, e.g. topk:0.05)")
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--clients-per-round", type=int, default=0)
@@ -216,6 +250,10 @@ def main():
     ap.add_argument("--dirichlet-beta", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    try:
+        transport_mod.make_codec(args.codec)
+    except ValueError as e:
+        ap.error(str(e))
     if args.mode == "vit":
         train_vit(args)
     else:

@@ -97,6 +97,8 @@ MOE_EXPERT_RULES = {
 
 
 def _path_keys(path):
+    # same stringification as repro.federated.leaves.path_keys; kept local
+    # so the low-level sharding module never imports the federated package
     return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
 
 

@@ -6,6 +6,8 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, for tests that exercise the benchmarks package
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax  # noqa: E402
 import pytest  # noqa: E402

@@ -114,6 +114,45 @@ def test_dirichlet_lower_beta_more_skewed():
     assert skew(0.05) < skew(100.0)
 
 
+def test_upload_embed_follows_active_from(rng):
+    """Upload carries the embedding side iff the client trained it
+    (active_from == 0) — the rule stage_update_mask uses — instead of the
+    historical ``sub_layers == stage`` check that was vacuously true."""
+    cfg = ModelConfig("t", "dense", 4, 32, 2, 2, 64, 50,
+                      compute_dtype="float32")
+    params = lm_mod.init_lm(rng, cfg)
+    embed_bytes = int(np.prod(params["embed"].shape) * 4)
+    for mode, carries_embed_late in (("layerwise", False),
+                                     ("progressive", True)):
+        plans = sched.build_schedule(FLConfig(rounds=8, schedule=mode), 4)
+        late = next(p for p in plans if p.stage == 3)
+        rng_, emb = comm.plan_payloads(late)["upload"]
+        assert emb == (late.active_from == 0) == carries_embed_late
+        # and the byte count moves with it
+        with_e = comm.partial_bytes(params, rng_, include_embed=True,
+                                    include_heads=False)
+        without = comm.partial_bytes(params, rng_, include_embed=False,
+                                     include_heads=False)
+        assert with_e - without >= embed_bytes
+
+
+def test_comm_ratios_match_paper_tables():
+    """Regression-pin the analytic layerwise-vs-e2e byte ratios against
+    the paper's Table 1 / Table 3 communication columns (full-size ViT-T,
+    180 rounds): comm multipliers vs FedMoCo of 0.08 (FedMoCo-LW / FLL+DD),
+    0.31 (LW-FedSSL), 0.54 (Prog-FedSSL), and the Table 1 ~12x reduction."""
+    from benchmarks import resources
+
+    base = resources.schedule_costs("e2e")["comm_total"]
+    paper = {"layerwise": 0.08, "lw_fedssl": 0.31, "progressive": 0.54,
+             "fll_dd": 0.08}
+    for schedule, want in paper.items():
+        got = resources.schedule_costs(schedule)["comm_total"] / base
+        assert abs(got - want) <= 0.06, (schedule, got, want)
+    lw_reduction = base / resources.schedule_costs("layerwise")["comm_total"]
+    assert 10.0 <= lw_reduction <= 14.0     # paper Table 1: 12x
+
+
 def test_client_sampling_subset(rng):
     from repro.federated.server import sample_clients
     sel = sample_clients(rng, 45, 5)

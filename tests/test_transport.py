@@ -1,0 +1,387 @@
+"""Wire transport invariants: payload pack/unpack round-trips across the
+vit / xlstm / zamba stacked-key families, codec error bounds, error-feedback
+residual conservation, measured-vs-analytic byte parity, and fp32
+bit-identity of the transport-routed driver against the legacy pytree path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import (FLConfig, ModelConfig, SSLConfig, SSMConfig,
+                                TrainConfig, XLSTMConfig)
+from repro.core import schedule as sched
+from repro.core import ssl as ssl_mod
+from repro.federated import aggregate, comm, server
+from repro.federated import client as client_mod
+from repro.federated.leaves import path_keys
+from repro.federated.transport import (Transport, build_payload_spec,
+                                       make_codec, pack_stage_payload,
+                                       unpack_stage_payload)
+from repro.models import lm as lm_mod
+from repro.models import vit as vit_mod
+from repro.optim import make_optimizer
+
+FAMILIES = ("vit", "xlstm", "zamba")
+
+
+def family_tree(family, seed=0):
+    """A small params tree of the given stacked-key family + its stage count."""
+    key = jax.random.PRNGKey(seed)
+    if family == "vit":
+        cfg = ModelConfig("t-vit", "dense", 4, 32, 2, 2, 64, 0, causal=False,
+                          compute_dtype="float32", act="gelu")
+        return vit_mod.init_vit(key, cfg), 4
+    if family == "xlstm":
+        cfg = ModelConfig("t-xlstm", "ssm", 4, 32, 2, 2, 64, 64,
+                          compute_dtype="float32",
+                          xlstm=XLSTMConfig(slstm_every=2))
+        return lm_mod.init_lm(key, cfg), lm_mod.num_stages(cfg)
+    cfg = ModelConfig("t-zamba", "hybrid", 4, 32, 2, 2, 64, 64,
+                      compute_dtype="float32", attn_every=2,
+                      ssm=SSMConfig(state_dim=16, head_dim=32, chunk_size=32))
+    return lm_mod.init_lm(key, cfg), lm_mod.num_stages(cfg)
+
+
+def kinds_of(spec):
+    return {s.kind for s in spec.slots}
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack structure
+# ---------------------------------------------------------------------------
+@given(fam=st.sampled_from(FAMILIES), lo=st.integers(0, 1),
+       seed=st.integers(0, 5))
+@settings(max_examples=12, deadline=None)
+def test_pack_unpack_roundtrip_exact(fam, lo, seed):
+    """fp32 pack -> unpack restores the sliced rows bit-exactly and leaves
+    everything outside the payload at the base tree's values."""
+    tree, S = family_tree(fam, seed)
+    hi = min(S, lo + 1)
+    spec = build_payload_spec(tree, (lo, hi), include_embed=(lo == 0),
+                              include_heads=True)
+    assert spec.total > 0 and "stacked" in kinds_of(spec)
+    flat = pack_stage_payload(tree, spec)
+    assert flat.shape == (spec.total,) and flat.dtype == jnp.float32
+
+    base = jax.tree.map(jnp.zeros_like, tree)
+    rebuilt = unpack_stage_payload(base, flat, spec)
+    flat2 = pack_stage_payload(rebuilt, spec)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(flat2))
+    # a leaf fully outside the payload keeps the base (zero) values
+    in_spec = {s.path for s in spec.slots}
+    outside = [(p, a) for p, a in
+               jax.tree_util.tree_flatten_with_path(rebuilt)[0]
+               if path_keys(p) not in in_spec]
+    if lo > 0:
+        assert outside, "staged payloads must exclude the embedding side"
+    for _, a in outside:
+        assert not np.any(np.asarray(a))
+
+
+def test_spec_membership_follows_flags():
+    tree, S = family_tree("vit")
+    full = build_payload_spec(tree, (0, S), include_embed=True,
+                              include_heads=True)
+    assert kinds_of(full) >= {"stacked", "embed", "extra"}
+    noemb = build_payload_spec(tree, (1, 2), include_embed=False,
+                               include_heads=True)
+    assert "embed" not in kinds_of(noemb)
+    # extra leaves (final_ln) travel in every payload
+    assert "extra" in kinds_of(noemb)
+    # zamba's shared attention block is an extra leaf set
+    ztree, zS = family_tree("zamba")
+    zspec = build_payload_spec(ztree, (zS - 1, zS), include_embed=False,
+                               include_heads=True)
+    assert any(s.path[0] == "shared_attn" for s in zspec.slots)
+
+
+# ---------------------------------------------------------------------------
+# codec round-trips
+# ---------------------------------------------------------------------------
+def _payload(fam, seed, lo=0):
+    tree, S = family_tree(fam, seed)
+    spec = build_payload_spec(tree, (lo, S), include_embed=(lo == 0),
+                              include_heads=True)
+    return pack_stage_payload(tree, spec), spec
+
+
+@given(fam=st.sampled_from(FAMILIES), seed=st.integers(0, 10))
+@settings(max_examples=9, deadline=None)
+def test_fp32_codec_is_identity(fam, seed):
+    flat, spec = _payload(fam, seed)
+    codec = make_codec("fp32")
+    out = codec.decode(codec.encode(flat, spec), spec)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(out))
+
+
+@given(fam=st.sampled_from(FAMILIES), name=st.sampled_from(["fp16", "bf16"]))
+@settings(max_examples=6, deadline=None)
+def test_cast_codec_exact_on_representable(fam, name):
+    """fp16/bf16 round-trip is exact for values already representable in
+    the wire dtype."""
+    flat, spec = _payload(fam, 0)
+    dt = jnp.float16 if name == "fp16" else jnp.bfloat16
+    rep = flat.astype(dt).astype(jnp.float32)
+    codec = make_codec(name)
+    out = codec.decode(codec.encode(rep, spec), spec)
+    np.testing.assert_array_equal(np.asarray(rep), np.asarray(out))
+
+
+@given(fam=st.sampled_from(FAMILIES), seed=st.integers(0, 10))
+@settings(max_examples=9, deadline=None)
+def test_int8_codec_bounded_error(fam, seed):
+    """Per-channel int8: |x - dq(q(x))| <= scale/2 <= amax/253 per channel."""
+    flat, spec = _payload(fam, seed)
+    codec = make_codec("int8")
+    out = np.asarray(codec.decode(codec.encode(flat, spec), spec))
+    x = np.asarray(flat)
+    err = np.abs(out - x)
+    # global bound: half an int8 step of the largest channel scale
+    assert err.max() <= np.abs(x).max() / 127.0 * 0.5 + 1e-7
+    rel = err.max() / max(np.abs(x).max(), 1e-12)
+    assert rel < 0.005
+
+
+@given(fam=st.sampled_from(FAMILIES), frac=st.sampled_from([0.05, 0.2, 1.0]))
+@settings(max_examples=9, deadline=None)
+def test_topk_error_feedback_conservation(fam, frac):
+    """decoded + new_residual == payload + old_residual, exactly: the
+    dropped mass is carried, never lost."""
+    flat, spec = _payload(fam, 3)
+    codec = make_codec(f"topk:{frac}")
+    old_res = jnp.asarray(
+        np.random.default_rng(0).normal(size=flat.shape).astype(np.float32))
+    comp = flat + old_res
+    wire = codec.encode(comp, spec)
+    dec = codec.decode(wire, spec)
+    new_res = comp - dec
+    np.testing.assert_array_equal(np.asarray(dec + new_res),
+                                  np.asarray(comp))
+    k = codec.k_for(spec)
+    assert wire["idx"].shape == (k,) and wire["val"].shape == (k,)
+    assert int(np.count_nonzero(np.asarray(dec))) <= k
+    if frac == 1.0:
+        np.testing.assert_array_equal(np.asarray(dec), np.asarray(comp))
+
+
+def test_make_codec_registry():
+    assert make_codec("topk:0.25").fraction == 0.25
+    with pytest.raises(ValueError):
+        make_codec("gzip")
+    with pytest.raises(ValueError):
+        make_codec("topk:0")
+
+
+# ---------------------------------------------------------------------------
+# measured wire bytes vs analytic accounting
+# ---------------------------------------------------------------------------
+def _ssl_online(seed=0):
+    cfg = ModelConfig("t-vit", "dense", 4, 32, 2, 2, 64, 0, causal=False,
+                      compute_dtype="float32", act="gelu")
+    sslc = SSLConfig(proj_hidden=32, pred_hidden=32, proj_dim=16)
+    enc = ssl_mod.make_vit_encoder(cfg)
+    state = ssl_mod.ssl_init(jax.random.PRNGKey(seed), enc, sslc)
+    return state["online"]
+
+
+@pytest.mark.parametrize("schedule", sched.SCHEDULES)
+@pytest.mark.parametrize("include_heads", [True, False])
+def test_fp32_wire_bytes_match_analytic(schedule, include_heads):
+    """Identity codec: measured wire bytes == comm.round_comm_bytes for
+    every round of every schedule, both directions."""
+    online = _ssl_online()
+    t = Transport("fp32", include_heads=include_heads)
+    plans = sched.build_schedule(FLConfig(rounds=8, schedule=schedule), 4)
+    for plan in plans:
+        cb = comm.round_comm_bytes(online, plan,
+                                   include_heads=include_heads)
+        specs = t.plan_specs(online, plan)
+        assert t.wire_bytes(specs["download"]) == cb["download"], plan
+        assert t.wire_bytes(specs["upload"]) == cb["upload"], plan
+
+
+@pytest.mark.parametrize("codec,min_ratio", [
+    ("fp16", 1.9), ("bf16", 1.9), ("int8", 3.5), ("topk:0.1", 4.5)])
+def test_codec_measured_compression(codec, min_ratio):
+    online = _ssl_online()
+    t = Transport(codec)
+    plan = sched.build_schedule(FLConfig(rounds=4, schedule="e2e"), 4)[0]
+    spec = t.plan_specs(online, plan)["upload"]
+    ratio = spec.payload_bytes / t.wire_bytes(spec)
+    assert ratio >= min_ratio
+
+
+# ---------------------------------------------------------------------------
+# transport-level aggregation semantics
+# ---------------------------------------------------------------------------
+def test_aggregate_uploads_fp32_equals_fedavg():
+    """With the identity codec, transport aggregation == full-tree FedAvg
+    when clients only changed payload leaves (the layer-wise contract)."""
+    online = _ssl_online()
+    plan = sched.build_schedule(FLConfig(rounds=4, schedule="e2e"), 4)[0]
+    t = Transport("fp32")
+    outs = []
+    for i in range(3):
+        d = jax.random.PRNGKey(100 + i)
+        outs.append(jax.tree.map(
+            lambda a: a + 0.01 * jax.random.normal(
+                jax.random.fold_in(d, hash(str(a.shape)) % 97), a.shape),
+            online))
+    w = aggregate.client_weights([1, 1, 2])
+    got, stats = t.aggregate_uploads(online, outs, [0, 1, 2], plan, w)
+    want = aggregate.fedavg(outs, w)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert stats["wire_bytes"] == stats["payload_bytes"]
+
+
+def test_topk_broadcast_mirror():
+    """Delta broadcast: a dense re-sync seeds the server-side mirror, then
+    sparse deltas converge the clients' view toward the server model."""
+    online = _ssl_online()
+    t = Transport("topk:0.1")
+    plan = sched.build_schedule(FLConfig(rounds=4, schedule="e2e"), 4)[0]
+    view1, s1 = t.broadcast(online, plan)
+    for a, b in zip(jax.tree.leaves(view1), jax.tree.leaves(online)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert s1["wire_bytes"] == s1["payload_bytes"]
+
+    def maxerr(view, ref):
+        return max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                   zip(jax.tree.leaves(view), jax.tree.leaves(ref)))
+
+    online2 = jax.tree.map(lambda a: a * 1.01, online)
+    view2, s2 = t.broadcast(online2, plan)
+    assert s2["wire_bytes"] < s2["payload_bytes"] / 3   # sparse delta round
+    err2 = maxerr(view2, online2)
+    # keep broadcasting the same model: each sparse round ships more of
+    # the remaining delta, so the client view converges (mirror EF)
+    err = err2
+    for _ in range(3):
+        view, _ = t.broadcast(online2, plan)
+        new_err = maxerr(view, online2)
+        assert new_err <= err + 1e-12
+        err = new_err
+    assert err < err2 or err == 0.0
+
+
+def test_residual_store_resets_on_spec_change():
+    online = _ssl_online()
+    t = Transport("topk:0.1")
+    plans = sched.build_schedule(FLConfig(rounds=4, schedule="layerwise"), 4)
+    s1 = t.plan_specs(online, plans[0])["upload"]
+    r = t.gather_residuals([0], s1)
+    assert not np.any(np.asarray(r))
+    t.store_residuals([0], s1, jnp.ones((1, s1.total)))
+    assert np.all(np.asarray(t.gather_residuals([0], s1)) == 1.0)
+    # next stage => different payload layout => residual resets to zero
+    s2 = t.plan_specs(online, plans[1])["upload"]
+    assert s2.sig != s1.sig
+    assert not np.any(np.asarray(t.gather_residuals([0], s2)))
+
+
+# ---------------------------------------------------------------------------
+# fp32 driver bit-parity against the legacy (pytree hand-off) FL loop
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_fp32_driver_bit_identical_to_legacy_loop():
+    """run_fedssl with the identity codec must reproduce the pre-transport
+    driver bit-for-bit: same RNG chain, local training from the server
+    pytree, full-tree FedAvg."""
+    from repro.data import iid_partition, synthetic_images
+    from repro.federated.driver import run_fedssl
+
+    cfg = ModelConfig("t-vit", "dense", 2, 32, 2, 2, 64, 0, causal=False,
+                      compute_dtype="float32", act="gelu")
+    sslc = SSLConfig(proj_hidden=32, pred_hidden=32, proj_dim=16)
+    tc = TrainConfig(batch_size=16, base_lr=1.5e-4)
+    fl = FLConfig(num_clients=2, rounds=2, local_epochs=1,
+                  schedule="layerwise")
+    key = jax.random.PRNGKey(0)
+    imgs, _ = synthetic_images(key, 64, 10, 32)
+    idx = [jnp.asarray(i) for i in iid_partition(64, 2)]
+
+    state, hist = run_fedssl(cfg, sslc, fl, tc, images=imgs,
+                             client_indices=idx, key=key, codec="fp32")
+    assert hist.wire_download_bytes == hist.download_bytes
+    assert hist.wire_upload_bytes == hist.upload_bytes
+    assert hist.compression_ratio == 1.0
+
+    # legacy loop: the seed driver's exact control flow, no transport
+    from repro.optim.schedules import learning_rate, scaled_base_lr
+    encoder = ssl_mod.make_vit_encoder(cfg)
+    k = jax.random.PRNGKey(0)
+    k_init, k = jax.random.split(k)
+    lstate = ssl_mod.ssl_init(k_init, encoder, sslc)
+    opt = make_optimizer(tc)
+    plans = sched.build_schedule(fl, encoder.num_stages)
+    base_lr = scaled_base_lr(tc.base_lr, tc.batch_size)
+    counts = [len(i) for i in idx]
+    stage_start = {}
+    for p in plans:
+        stage_start.setdefault(p.stage, p.round_idx)
+    stage_lengths = {s: sum(1 for p in plans if p.stage == s)
+                     for s in set(p.stage for p in plans)}
+    for plan in plans:
+        if plan.new_stage:
+            lstate = server.begin_stage(lstate, plan.stage,
+                                        weight_transfer=fl.weight_transfer)
+        lr = float(learning_rate(
+            plan.round_idx, fl.rounds, base_lr, tc.lr_schedule,
+            stage_step=plan.round_idx - stage_start[plan.stage],
+            stage_total=stage_lengths[plan.stage],
+            warmup_steps=tc.warmup_steps))
+        k, ks = jax.random.split(k)
+        participants = server.sample_clients(ks, fl.num_clients,
+                                             fl.clients_per_round)
+        step_fn = client_mod.make_local_step(
+            encoder, sslc, opt, sub_layers=plan.sub_layers,
+            active_from=plan.active_from, align=plan.align,
+            depth_dropout=plan.depth_dropout)
+        outs = []
+        for i in participants:
+            k, kc = jax.random.split(k)
+            online_i, _ = client_mod.local_train(
+                lstate, imgs[idx[i]], step_fn, opt,
+                epochs=fl.local_epochs, batch_size=tc.batch_size, key=kc,
+                lr=lr, global_enc=None)
+            outs.append(online_i)
+        w = aggregate.client_weights([counts[i] for i in participants])
+        lstate = {**lstate, "online": aggregate.fedavg(outs, w)}
+
+    for a, b in zip(jax.tree.leaves(state["online"]),
+                    jax.tree.leaves(lstate["online"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# lossy codecs still train (tier-1 integration config, reduced rounds)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_lossy_codecs_train_close_to_fp32():
+    from repro.data import iid_partition, synthetic_images
+    from repro.federated.driver import run_fedssl
+
+    cfg = ModelConfig("t-vit", "dense", 2, 32, 2, 2, 64, 0, causal=False,
+                      compute_dtype="float32", act="gelu")
+    sslc = SSLConfig(proj_hidden=32, pred_hidden=32, proj_dim=16)
+    tc = TrainConfig(batch_size=16, base_lr=1.5e-4)
+    key = jax.random.PRNGKey(0)
+    imgs, _ = synthetic_images(key, 64, 10, 32)
+    idx = [jnp.asarray(i) for i in iid_partition(64, 2)]
+
+    def final_loss(codec):
+        fl = FLConfig(num_clients=2, rounds=2, local_epochs=1,
+                      schedule="e2e")
+        _, hist = run_fedssl(cfg, sslc, fl, tc, images=imgs,
+                             client_indices=idx, key=key, codec=codec)
+        return hist
+
+    ref = final_loss("fp32")
+    for codec in ("fp16", "int8", "topk:0.1"):
+        h = final_loss(codec)
+        assert np.isfinite(h.loss[-1])
+        assert abs(h.loss[-1] - ref.loss[-1]) <= 0.1 * abs(ref.loss[-1])
+        assert h.compression_ratio >= 1.9
