@@ -12,6 +12,9 @@
   engine   sequential vs vmap round engine throughput
   transport wire payload pack/unpack throughput + per-codec compression
            per schedule (writes results/transport_bench.json)
+  simulation heterogeneous-fleet round policies: wall-clock to target
+           loss, device-seconds, energy, drops per schedule x fleet x
+           policy (writes results/simulation_bench.json)
 
 ``python -m benchmarks.run`` runs the fast set; ``--full`` adds the
 reduced-scale FL accuracy benchmarks (table4), which train for real.
@@ -324,6 +327,100 @@ def bench_transport(reps=5):
     return rows
 
 
+def bench_simulation(rounds=6, clients=6, clients_per_round=4,
+                     schedules=("e2e", "lw_fedssl"), fleets=None,
+                     policies=None, seed=0, write=True):
+    """Fleet simulation: schedules x fleet profiles x round policies.
+
+    For each (schedule, fleet) group the first policy's best round-mean
+    loss becomes the group's target, and every policy reports the
+    simulated wall-clock needed to reach it — alongside device-seconds,
+    the energy proxy and dropped client-rounds. Writes
+    results/simulation_bench.json (validated against
+    benchmarks.schemas) and emits one BENCH json line. Tests call this
+    with smaller knobs and ``write=False``.
+    """
+    print("\n== Simulation: fleet x round-policy cost frontier ==")
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import (FLConfig, ModelConfig, SSLConfig,
+                                    TrainConfig)
+    from repro.data import iid_partition, synthetic_images
+    from repro.federated import fleet as fleet_mod
+    from repro.federated import simulation as sim_mod
+    from repro.federated.driver import run_fedssl
+    from benchmarks.schemas import validate_simulation_bench
+
+    fleets = tuple(fleets or fleet_mod.PROFILES)
+    policies = tuple(policies or sim_mod.POLICIES)
+    cfg = ModelConfig("t-vit", "dense", 2, 32, 2, 2, 64, 0, causal=False,
+                      compute_dtype="float32", act="gelu")
+    sslc = SSLConfig(proj_hidden=32, pred_hidden=32, proj_dim=16)
+    tc = TrainConfig(batch_size=8, base_lr=1.5e-4)
+    samples = clients * 2 * tc.batch_size
+    imgs, _ = synthetic_images(jax.random.PRNGKey(seed), samples, 10, 32)
+    idx = [jnp.asarray(i) for i in iid_partition(samples, clients)]
+    rows = []
+    for schedule in schedules:
+        fl = FLConfig(num_clients=clients, rounds=rounds, local_epochs=1,
+                      clients_per_round=clients_per_round,
+                      schedule=schedule)
+        for prof in fleets:
+            target = None
+            for policy in policies:
+                sim = sim_mod.make_sim(
+                    fleet_mod.make_fleet(prof, clients, seed=seed),
+                    policy, num_clients=clients, seed=seed)
+                _, hist = run_fedssl(cfg, sslc, fl, tc, images=imgs,
+                                     client_indices=idx,
+                                     key=jax.random.PRNGKey(seed), sim=sim)
+                if target is None:     # first policy sets the group bar
+                    target = min(hist.loss)
+                ttt = hist.wall_clock_to_loss(target)
+                rows.append({
+                    "schedule": schedule, "fleet": prof, "policy": policy,
+                    "rounds": rounds, "clients": clients,
+                    "clients_per_round": clients_per_round,
+                    "target_loss": round(float(target), 6),
+                    "final_loss": round(float(hist.loss[-1]), 6),
+                    "wall_clock_to_target_s":
+                        None if ttt is None else round(float(ttt), 6),
+                    "total_wall_clock_s":
+                        round(float(hist.total_wall_clock), 6),
+                    "device_seconds":
+                        round(float(hist.total_device_seconds), 6),
+                    "energy_j": round(float(hist.total_energy), 6),
+                    "dropped_client_rounds": int(hist.total_dropped),
+                })
+                r = rows[-1]
+                tt = (f"{r['wall_clock_to_target_s']:.2f}s"
+                      if r["wall_clock_to_target_s"] is not None
+                      else "  -  ")
+                print(f"{schedule:10s} {prof:18s} {policy:14s} "
+                      f"to-target {tt:>8s}  wall "
+                      f"{r['total_wall_clock_s']:7.2f}s  dev "
+                      f"{r['device_seconds']:7.2f}s  "
+                      f"{r['energy_j']:6.2f}J  "
+                      f"dropped {r['dropped_client_rounds']}")
+    doc = {"bench": "simulation",
+           "config": {"rounds": rounds, "clients": clients,
+                      "clients_per_round": clients_per_round,
+                      "seed": seed, "schedules": list(schedules),
+                      "fleets": list(fleets), "policies": list(policies),
+                      "engine": "sequential"},
+           "rows": rows}
+    errors = validate_simulation_bench(doc)
+    assert not errors, errors
+    if write:
+        RESULTS.mkdir(exist_ok=True)
+        out = RESULTS / "simulation_bench.json"
+        out.write_text(json.dumps(doc, indent=1))
+        print("BENCH " + json.dumps({"bench": "simulation",
+                                     "rows": len(rows)}))
+        print(f"(schema-validated; json -> {out})")
+    return doc
+
+
 def bench_table4(rounds=4):
     print("\n== Table 4: auxiliary data amount (reduced-scale, "
           "synthetic) ==")
@@ -362,6 +459,7 @@ BENCHES = {
     "fig5": bench_fig5, "fig6": bench_fig6, "fig14": bench_fig14,
     "kernels": bench_kernels, "roofline": bench_roofline,
     "engine": bench_engine, "transport": bench_transport,
+    "simulation": bench_simulation,
 }
 FULL_BENCHES = {"table4": bench_table4}
 

@@ -1,0 +1,76 @@
+"""Schemas for the JSON documents the benchmarks write under results/.
+
+A stale results file once sketched a fleet-simulator schema whose code
+never landed; to keep bench JSON from silently drifting away from what
+the code emits again, the writer (``benchmarks.run``) and a tier-1 test
+(``tests/test_simulation.py``) both validate against the single
+definition here. ``validate_simulation_bench`` returns a list of
+human-readable problems (empty = valid) instead of raising, so callers
+can report every issue at once.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+# field -> allowed types; a tuple means any of them. ``wall_clock_to_
+# target_s`` is None when the run never reached the target loss.
+SIMULATION_ROW_SCHEMA: Dict[str, Any] = {
+    "schedule": str,
+    "fleet": str,
+    "policy": str,
+    "rounds": int,
+    "clients": int,
+    "clients_per_round": int,
+    "target_loss": float,
+    "final_loss": float,
+    "wall_clock_to_target_s": (float, type(None)),
+    "total_wall_clock_s": float,
+    "device_seconds": float,
+    "energy_j": float,
+    "dropped_client_rounds": int,
+}
+
+SIMULATION_TOP_KEYS = ("bench", "config", "rows")
+
+
+def _check_row(i: int, row: Any, errors: List[str]):
+    if not isinstance(row, dict):
+        errors.append(f"rows[{i}]: expected object, got {type(row).__name__}")
+        return
+    for field, types in SIMULATION_ROW_SCHEMA.items():
+        if field not in row:
+            errors.append(f"rows[{i}]: missing field '{field}'")
+            continue
+        tt = types if isinstance(types, tuple) else (types,)
+        v = row[field]
+        # bool is an int subclass — reject it where int is expected
+        ok = isinstance(v, tt) and not (isinstance(v, bool)
+                                        and bool not in tt)
+        if not ok:
+            errors.append(f"rows[{i}].{field}: expected "
+                          f"{'/'.join(t.__name__ for t in tt)}, "
+                          f"got {type(v).__name__} ({v!r})")
+    for field in row:
+        if field not in SIMULATION_ROW_SCHEMA:
+            errors.append(f"rows[{i}]: unknown field '{field}' "
+                          f"(update benchmarks/schemas.py)")
+
+
+def validate_simulation_bench(doc: Any) -> List[str]:
+    """Validate a simulation-bench document; returns a list of problems."""
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"top level: expected object, got {type(doc).__name__}"]
+    for k in SIMULATION_TOP_KEYS:
+        if k not in doc:
+            errors.append(f"top level: missing key '{k}'")
+    if doc.get("bench") != "simulation":
+        errors.append(f"bench: expected 'simulation', "
+                      f"got {doc.get('bench')!r}")
+    rows = doc.get("rows", [])
+    if not isinstance(rows, list) or not rows:
+        errors.append("rows: expected a non-empty list")
+        return errors
+    for i, row in enumerate(rows):
+        _check_row(i, row, errors)
+    return errors

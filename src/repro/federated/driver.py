@@ -49,6 +49,13 @@ class FLHistory:
     # codec actually put on the wire this round
     wire_download_bytes: List[int] = field(default_factory=list)
     wire_upload_bytes: List[int] = field(default_factory=list)
+    # fleet-simulator accounting (populated only when a Simulation is
+    # passed to run_fedssl; empty lists otherwise)
+    round_wall_clock: List[float] = field(default_factory=list)
+    device_seconds: List[float] = field(default_factory=list)
+    energy_joules: List[float] = field(default_factory=list)
+    dropped_clients: List[int] = field(default_factory=list)
+    participants: List[tuple] = field(default_factory=list)
 
     @property
     def total_comm(self) -> int:
@@ -64,17 +71,48 @@ class FLHistory:
         bytes. 1.0 for the identity codec."""
         return self.total_comm / max(1, self.total_wire)
 
+    @property
+    def total_wall_clock(self) -> float:
+        return sum(self.round_wall_clock)
+
+    @property
+    def total_device_seconds(self) -> float:
+        return sum(self.device_seconds)
+
+    @property
+    def total_energy(self) -> float:
+        return sum(self.energy_joules)
+
+    @property
+    def total_dropped(self) -> int:
+        return sum(self.dropped_clients)
+
+    def wall_clock_to_loss(self, target: float):
+        """Cumulative simulated seconds until the round-mean loss first
+        reaches ``target``; None if it never does (or no simulation ran)."""
+        t = 0.0
+        for wall, loss in zip(self.round_wall_clock, self.loss):
+            t += wall
+            if loss <= target:
+                return t
+        return None
+
 
 def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                aux_images=None, key=None, encoder=None, image_size: int = 32,
                log=None, engine: str = "sequential",
-               codec: str = "fp32") -> tuple:
+               codec: str = "fp32", sim=None) -> tuple:
     """Run the FL process; returns (final_state, FLHistory).
 
     images: (n, H, W, 3) pooled training pool; client_indices: list of index
     arrays (one per client); aux_images: D_g for server calibration;
     engine: "sequential" (reference) or "vmap" (one dispatch per round);
-    codec: wire compression (transport.CODECS — fp32/fp16/bf16/int8/topk).
+    codec: wire compression (transport.CODECS — fp32/fp16/bf16/int8/topk);
+    sim: optional ``simulation.Simulation`` (fleet + round policy). With
+    ``sim=None`` — or the synchronous policy over a uniform fleet — the
+    training numerics are bit-identical to the pre-simulator driver; other
+    policies change who trains and how updates aggregate, and ``FLHistory``
+    gains per-round wall-clock / device-seconds / energy / drop counts.
     """
     key = key if key is not None else jax.random.PRNGKey(fl.seed)
     if encoder is None:
@@ -91,6 +129,13 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
         engine, encoder=encoder, ssl_cfg=ssl_cfg, opt=opt, fl=fl,
         train_cfg=train_cfg, images=images, client_indices=client_indices,
         transport=wire)
+    if sim is not None:
+        # ViT patch grid prices the per-step FLOPs (4x4 patches)
+        sim.prepare(model_cfg, num_stages=encoder.num_stages,
+                    counts=[len(ix) for ix in client_indices],
+                    batch=train_cfg.batch_size,
+                    tokens=(image_size // 4) ** 2,
+                    local_epochs=fl.local_epochs)
 
     calib_cache: Dict[int, Any] = {}
 
@@ -109,6 +154,8 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
 
     for plan in plans:
         if plan.new_stage:
+            if sim is not None:
+                sim.begin_stage()
             state = server.begin_stage(
                 state, plan.stage, weight_transfer=fl.weight_transfer)
         lr = float(learning_rate(
@@ -117,13 +164,25 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
             stage_total=stage_lengths[plan.stage],
             warmup_steps=train_cfg.warmup_steps))
         key, ks = jax.random.split(key)
-        participants = server.sample_clients(ks, fl.num_clients,
-                                             fl.clients_per_round)
+        # with the default overcommit (1.0) this is byte-for-byte the
+        # historical sampling call — same key, same cohort
+        cohort = server.sample_clients(
+            ks, fl.num_clients, fl.clients_per_round,
+            overcommit=sim.overcommit if sim is not None else 1.0)
         # download direction: clients (and the alignment loss's global
         # model) see the wire-decoded broadcast, not the server pytree
         dstate, down = server.broadcast_download(state, plan, wire)
         global_enc = (jax.tree.map(jnp.copy, dstate["online"]["enc"])
                       if plan.align else None)
+        outcome = None
+        if sim is not None:
+            up_spec = wire.plan_specs(state["online"], plan)["upload"]
+            outcome = sim.begin_round(
+                plan, cohort, down_bytes=down["wire_bytes"],
+                up_bytes=wire.upload_stats(up_spec)["wire_bytes"])
+            participants = list(outcome.train_ids)
+        else:
+            participants = cohort
         # per-participant keys are split here, identically for both
         # engines, so the main RNG chain (and the calibration key below)
         # is engine-independent
@@ -131,9 +190,25 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
         for _ in participants:
             key, kc = jax.random.split(key)
             client_keys.append(kc)
-        new_online, losses, up = eng.run_round(
-            dstate, plan, participants, client_keys, lr, global_enc,
-            server_online=state["online"])
+        if sim is not None and sim.policy.needs_client_trees:
+            # buffered-async: the engine returns per-client decoded
+            # trees; the policy buffers them and aggregates arrivals
+            # staleness-weighted (possibly rounds after they trained)
+            if participants:
+                trees, losses, up = eng.run_round(
+                    dstate, plan, participants, client_keys, lr,
+                    global_enc, server_online=state["online"],
+                    collect=True)
+            else:   # every sampled candidate was busy or offline
+                trees, losses = [], []
+                up = wire.upload_stats(up_spec)
+            new_online, outcome = sim.complete_round_async(outcome, trees)
+        else:
+            new_online, losses, up = eng.run_round(
+                dstate, plan, participants, client_keys, lr, global_enc,
+                server_online=state["online"])
+            if sim is not None:
+                outcome = sim.complete_round(outcome)
         state = {**state, "online": new_online}
         if plan.server_calibrate and aux_images is not None:
             key, kg = jax.random.split(key)
@@ -143,16 +218,29 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                 key=kg, lr=lr)
         cb = comm.round_comm_bytes(state["online"], plan,
                                    include_heads=fl.include_heads)
-        hist.loss.append(sum(losses) / max(1, len(losses)))
+        if losses:
+            hist.loss.append(sum(losses) / len(losses))
+        else:   # async round with no launches: carry the last mean forward
+            hist.loss.append(hist.loss[-1] if hist.loss else float("nan"))
         hist.round_stage.append(plan.stage)
         hist.download_bytes.append(cb["download"])
         hist.upload_bytes.append(cb["upload"])
         hist.wire_download_bytes.append(down["wire_bytes"])
         hist.wire_upload_bytes.append(up["wire_bytes"])
+        sim_log = ""
+        if outcome is not None:
+            hist.round_wall_clock.append(outcome.wall_clock_s)
+            hist.device_seconds.append(outcome.device_seconds)
+            hist.energy_joules.append(outcome.energy_j)
+            hist.dropped_clients.append(len(outcome.dropped))
+            hist.participants.append(tuple(participants))
+            sim_log = (f" sim {outcome.wall_clock_s:.1f}s "
+                       f"dropped {len(outcome.dropped)}")
         if log:
             log(f"round {plan.round_idx + 1}/{fl.rounds} stage {plan.stage} "
                 f"loss {hist.loss[-1]:.4f} lr {lr:.2e} "
                 f"down {cb['download'] / 1e6:.2f}MB "
                 f"up {cb['upload'] / 1e6:.2f}MB "
-                f"wire {(down['wire_bytes'] + up['wire_bytes']) / 1e6:.2f}MB")
+                f"wire {(down['wire_bytes'] + up['wire_bytes']) / 1e6:.2f}MB"
+                + sim_log)
     return state, hist

@@ -50,7 +50,7 @@ def _pool_len(pool) -> int:
 
 
 def build_round_program(client_init, client_step, extract,
-                        wire_transform=None):
+                        wire_transform=None, fedavg=True):
     """Compile a full FL round into one jit'd program.
 
     client_init(broadcast) -> carry          (per-client local state)
@@ -58,6 +58,9 @@ def build_round_program(client_init, client_step, extract,
     extract(carry) -> pytree to aggregate
     wire_transform(stacked_outs, broadcast, residuals)
         -> (decoded_stacked, new_residuals)  (optional transport hook)
+    fedavg=False skips the fused aggregation and returns the (decoded)
+    client-stacked trees instead — the buffered-async round policy holds
+    individual updates across rounds and averages them itself.
 
     The returned function has signature
 
@@ -101,6 +104,8 @@ def build_round_program(client_init, client_step, extract,
                      weights, lr):
             outs, losses = run_clients(broadcast, shards, batch_idx,
                                        step_keys, valid, lr)
+            if not fedavg:
+                return outs, losses
             return aggregate.fedavg_stacked(outs, weights), losses
     else:
         def round_fn(broadcast, shards, batch_idx, step_keys, valid,
@@ -108,6 +113,8 @@ def build_round_program(client_init, client_step, extract,
             outs, losses = run_clients(broadcast, shards, batch_idx,
                                        step_keys, valid, lr)
             decoded, new_res = wire_transform(outs, broadcast, residuals)
+            if not fedavg:
+                return decoded, losses, new_res
             return (aggregate.fedavg_stacked(decoded, weights), losses,
                     new_res)
 
@@ -139,7 +146,7 @@ class SequentialEngine:
         return self._steps[sig]
 
     def run_round(self, state, plan, participants, client_keys, lr,
-                  global_enc, server_online):
+                  global_enc, server_online, collect=False):
         step_fn = self._step(plan)
         outs, losses = [], []
         for i, kc in zip(participants, client_keys):
@@ -150,6 +157,11 @@ class SequentialEngine:
                 global_enc=global_enc)
             outs.append(online_i)
             losses.append(float(m["loss"]))
+        if collect:
+            trees, stats = self.transport.decode_uploads(
+                server_online, outs, participants, plan,
+                ref_online=state["online"])
+            return trees, losses, stats
         w = aggregate.client_weights([self.counts[i] for i in participants])
         new_online, stats = self.transport.aggregate_uploads(
             server_online, outs, participants, plan, w,
@@ -194,9 +206,9 @@ class VmapEngine:
         """(C, n_max) pool indices -> client-stacked shard data."""
         return jax.tree.map(lambda a: a[idx], self._pool)
 
-    def _program(self, plan, spec):
+    def _program(self, plan, spec, fedavg=True):
         sig = (plan.sub_layers, plan.active_from, plan.align,
-               plan.depth_dropout, spec.sig)
+               plan.depth_dropout, spec.sig, fedavg)
         if sig not in self._programs:
             step = client_mod.make_local_step(
                 self.encoder, self.ssl_cfg, self.opt,
@@ -225,11 +237,12 @@ class VmapEngine:
             self._programs[sig] = build_round_program(
                 client_init, client_step, lambda c: c[0]["online"],
                 wire_transform=lambda outs, bc, res: wire(
-                    outs, bc["server"], bc["state"]["online"], res))
+                    outs, bc["server"], bc["state"]["online"], res),
+                fedavg=fedavg)
         return self._programs[sig]
 
     def run_round(self, state, plan, participants, client_keys, lr,
-                  global_enc, server_online):
+                  global_enc, server_online, collect=False):
         bs = self.train_cfg.batch_size
         idxs, keys, valids = [], [], []
         for i, kc in zip(participants, client_keys):
@@ -250,13 +263,19 @@ class VmapEngine:
                 [self.counts[i] for i in participants])
         spec = self.transport.plan_specs(server_online, plan)["upload"]
         residuals = self.transport.gather_residuals(participants, spec)
-        new_online, losses, new_res = self._program(plan, spec)(
+        result, losses, new_res = self._program(
+            plan, spec, fedavg=not collect)(
             {"state": state, "global_enc": global_enc,
              "server": server_online}, shards,
             jnp.stack(idxs), jnp.stack(keys),
             jnp.asarray(np.stack(valids)), w, jnp.float32(lr), residuals)
         self.transport.store_residuals(participants, spec, new_res)
-        return (new_online, [float(x) for x in np.asarray(losses)],
+        if collect:
+            # unstack the decoded client axis into per-client trees (the
+            # async policy holds them individually across rounds)
+            result = [jax.tree.map(lambda a, i=i: a[i], result)
+                      for i in range(len(participants))]
+        return (result, [float(x) for x in np.asarray(losses)],
                 self.transport.upload_stats(spec))
 
 

@@ -3,6 +3,8 @@ round bookkeeping (stage transitions, weight transfer, client sampling).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -88,9 +90,15 @@ def begin_stage(state, stage: int, *, weight_transfer: bool):
     return out
 
 
-def sample_clients(key, num_clients: int, clients_per_round: int):
-    if not clients_per_round or clients_per_round >= num_clients:
+def sample_clients(key, num_clients: int, clients_per_round: int, *,
+                   overcommit: float = 1.0):
+    """Sample the round's cohort. ``overcommit > 1`` (the deadline
+    policy's straggler insurance) inflates the sample by that factor,
+    clamped to the population; ``overcommit=1`` is byte-for-byte the
+    historical behavior (same key, same draw)."""
+    n = clients_per_round or num_clients
+    n = min(num_clients, math.ceil(n * overcommit))
+    if n >= num_clients:
         return list(range(num_clients))
-    idx = jax.random.choice(key, num_clients, (clients_per_round,),
-                            replace=False)
+    idx = jax.random.choice(key, num_clients, (n,), replace=False)
     return [int(i) for i in idx]

@@ -474,13 +474,13 @@ class Transport:
         return view, {"wire_bytes": wire,
                       "payload_bytes": spec.payload_bytes}
 
-    def aggregate_uploads(self, server_online, outs, client_ids, plan,
-                          weights, ref_online=None):
-        """Clients -> server, sequential form: per-client payload -> wire
-        (-> EF residual) -> decoded tree; FedAvg over the decoded trees.
-        ``ref_online`` is the downloaded tree clients started from — the
-        shared reference delta codecs subtract. Returns (aggregated tree,
-        measured per-client upload stats)."""
+    def decode_uploads(self, server_online, outs, client_ids, plan,
+                       ref_online=None):
+        """Clients -> server, without aggregation: per-client payload ->
+        wire (-> EF residual) -> decoded tree. Returns (list of decoded
+        trees, measured per-client upload stats). The buffered-async
+        policy consumes this form — it holds individual updates across
+        rounds and aggregates them staleness-weighted later."""
         spec = self.plan_specs(server_online, plan)["upload"]
         ref_online = server_online if ref_online is None else ref_online
         fn = self._upload_fn(spec)
@@ -492,7 +492,18 @@ class Transport:
             trees.append(tree)
             new_res.append(nr)
         self.store_residuals(client_ids, spec, new_res)
-        return aggregate.fedavg(trees, weights), self.upload_stats(spec)
+        return trees, self.upload_stats(spec)
+
+    def aggregate_uploads(self, server_online, outs, client_ids, plan,
+                          weights, ref_online=None):
+        """Clients -> server, sequential form: per-client payload -> wire
+        (-> EF residual) -> decoded tree; FedAvg over the decoded trees.
+        ``ref_online`` is the downloaded tree clients started from — the
+        shared reference delta codecs subtract. Returns (aggregated tree,
+        measured per-client upload stats)."""
+        trees, stats = self.decode_uploads(server_online, outs, client_ids,
+                                           plan, ref_online=ref_online)
+        return aggregate.fedavg(trees, weights), stats
 
     def upload_stats(self, spec: PayloadSpec) -> Dict[str, int]:
         return {"wire_bytes": self.wire_bytes(spec),

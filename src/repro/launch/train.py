@@ -42,6 +42,8 @@ from repro.core import ssl as ssl_mod
 from repro.data import iid_partition, dirichlet_partition, synthetic_images
 from repro.data.synthetic import synthetic_tokens
 from repro.federated import aggregate, comm
+from repro.federated import fleet as fleet_mod
+from repro.federated import simulation as sim_mod
 from repro.federated import transport as transport_mod
 from repro.federated.driver import run_fedssl
 from repro.federated import eval as fl_eval
@@ -68,15 +70,22 @@ def train_vit(args):
     else:
         idx = iid_partition(args.samples, fl.num_clients, seed=args.seed)
     aux = images[:max(args.batch, args.samples // 10)]
+    sim = make_sim_from_args(args, fl.num_clients)
     t0 = time.time()
     state, hist = run_fedssl(
         cfg, ssl_cfg, fl, tc, images=images,
         client_indices=[jnp.asarray(i) for i in idx], aux_images=aux,
-        key=key, log=print, engine=args.engine, codec=args.codec)
+        key=key, log=print, engine=args.engine, codec=args.codec, sim=sim)
     print(f"training done in {time.time() - t0:.1f}s; "
           f"total comm {hist.total_comm / 1e6:.2f} MB analytic, "
           f"{hist.total_wire / 1e6:.2f} MB on the wire "
           f"({args.codec}: {hist.compression_ratio:.2f}x)")
+    if sim is not None:
+        print(f"simulated fleet '{args.fleet}' / policy "
+              f"'{args.round_policy}': {hist.total_wall_clock:.1f}s "
+              f"wall-clock, {hist.total_device_seconds:.1f} device-s, "
+              f"{hist.total_energy:.1f}J, "
+              f"{hist.total_dropped} dropped client-rounds")
     enc = ssl_mod.make_vit_encoder(cfg)
     n_eval = min(args.samples // 2, 512)
     acc = fl_eval.linear_eval(
@@ -222,6 +231,25 @@ def train_lm(args):
     return params, hist
 
 
+def make_sim_from_args(args, num_clients):
+    """Build the fleet simulator from CLI flags; None when --fleet unset."""
+    if not args.fleet:
+        if args.round_policy != "synchronous":
+            raise SystemExit(
+                "--round-policy needs --fleet (one of "
+                + ", ".join(fleet_mod.PROFILES) + ")")
+        return None
+    kw = {}
+    if args.round_policy == "deadline":
+        kw = {"overcommit": args.overcommit}
+        if args.deadline_s > 0:
+            kw["deadline_s"] = args.deadline_s
+    elif args.round_policy == "buffered-async":
+        kw = {"buffer": args.async_buffer, "alpha": args.staleness_alpha}
+    return sim_mod.make_sim(args.fleet, args.round_policy,
+                            num_clients=num_clients, seed=args.seed, **kw)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("vit", "lm"), default="vit")
@@ -237,6 +265,29 @@ def main():
                          "fp32 (identity), fp16, bf16, int8 (per-channel "
                          "quantization), topk[:frac] (sparsification with "
                          "error feedback, e.g. topk:0.05)")
+    ap.add_argument("--fleet", default="",
+                    choices=("",) + fleet_mod.PROFILES,
+                    help="simulate a heterogeneous device fleet drawn from "
+                         "this named profile (docs/simulation.md); empty = "
+                         "no simulation")
+    ap.add_argument("--round-policy", default="synchronous",
+                    choices=sim_mod.POLICIES,
+                    help="round scheduling policy over the simulated "
+                         "fleet: synchronous (wait for all), deadline "
+                         "(overcommit + drop stragglers), buffered-async "
+                         "(staleness-weighted FedBuff aggregation)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="fixed round deadline in simulated seconds "
+                         "(0 = adaptive: the cohort's 60th percentile)")
+    ap.add_argument("--overcommit", type=float, default=1.5,
+                    help="deadline policy: sample this factor more "
+                         "clients, clamped to the population")
+    ap.add_argument("--async-buffer", type=int, default=0,
+                    help="buffered-async: aggregate once this many "
+                         "updates arrived (0 = half the cohort)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="buffered-async: (1+staleness)^-alpha weight "
+                         "discount")
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--clients-per-round", type=int, default=0)
@@ -254,6 +305,9 @@ def main():
         transport_mod.make_codec(args.codec)
     except ValueError as e:
         ap.error(str(e))
+    if args.mode == "lm" and args.fleet:
+        ap.error("--fleet simulation currently drives the vit driver "
+                 "(repro.federated.driver); use --mode vit")
     if args.mode == "vit":
         train_vit(args)
     else:

@@ -48,4 +48,7 @@ except ModuleNotFoundError:
         names = sorted(strategies)
         grid = list(itertools.product(*(strategies[n].values
                                         for n in names)))
+        if len(names) == 1:
+            # parametrize over one name takes scalars, not 1-tuples
+            grid = [g[0] for g in grid]
         return lambda f: pytest.mark.parametrize(",".join(names), grid)(f)

@@ -1,0 +1,349 @@
+"""Fleet simulator tests: determinism, policy invariants, equivalence.
+
+Three layers:
+  - host-side unit/property tests (fleet draws, pricing, staleness
+    weights, policy resolve logic) — no jax training involved;
+  - driver integration (marked slow): the synchronous/uniform
+    bit-identical regression, deadline survivor-FedAvg equivalence,
+    cross-engine determinism and the policy x fleet matrix;
+  - bench schema validation (benchmarks.schemas is the single source of
+    truth for results/simulation_bench.json).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import (FLConfig, ModelConfig, SSLConfig,
+                                TrainConfig)
+from repro.federated import driver, fleet, server, simulation
+
+CFG = ModelConfig("t-vit", "dense", 2, 32, 2, 2, 64, 0, causal=False,
+                  compute_dtype="float32", act="gelu")
+SSLC = SSLConfig(proj_hidden=32, pred_hidden=32, proj_dim=16)
+TC = TrainConfig(batch_size=8)
+N_CLIENTS = 4
+_IMAGES = jnp.asarray(
+    np.random.default_rng(0).normal(size=(64, 32, 32, 3)), jnp.float32)
+_INDICES = tuple(np.arange(i * 16, (i + 1) * 16) for i in range(N_CLIENTS))
+
+
+@functools.lru_cache(maxsize=None)
+def run_driver(policy, profile, engine="sequential", schedule="lw_fedssl",
+               rounds=4, seed=0, clients_per_round=3, policy_kw=()):
+    """Memoized tiny driver run; several tests share each configuration."""
+    fl = FLConfig(num_clients=N_CLIENTS, rounds=rounds, local_epochs=1,
+                  clients_per_round=clients_per_round, schedule=schedule)
+    sim = None
+    if policy is not None:
+        sim = simulation.make_sim(
+            fleet.make_fleet(profile, N_CLIENTS, seed=seed), policy,
+            num_clients=N_CLIENTS, seed=seed, **dict(policy_kw))
+    state, hist = driver.run_fedssl(
+        CFG, SSLC, fl, TC, images=_IMAGES, client_indices=list(_INDICES),
+        key=jax.random.PRNGKey(0), engine=engine, sim=sim)
+    return state, hist, sim
+
+
+# ---------------------------------------------------------------------------
+# fleet draws
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(1, 32),
+       profile=st.sampled_from(fleet.PROFILES))
+def test_fleet_same_seed_same_draws(seed, n, profile):
+    a = fleet.make_fleet(profile, n, seed)
+    b = fleet.make_fleet(profile, n, seed)
+    assert a.draw_signature() == b.draw_signature()
+    assert len(a) == n
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000),
+       profile=st.sampled_from(("mobile-mix", "pareto-stragglers")))
+def test_fleet_different_seed_different_draws(seed, profile):
+    a = fleet.make_fleet(profile, 16, seed)
+    b = fleet.make_fleet(profile, 16, seed + 1)
+    assert a.draw_signature() != b.draw_signature()
+
+
+def test_fleet_profiles():
+    uni = fleet.make_fleet("uniform", 8, seed=3)
+    assert uni.homogeneous
+    assert uni[0] == fleet.REFERENCE_DEVICE
+    mix = fleet.make_fleet("mobile-mix", 64, seed=3)
+    assert not mix.homogeneous
+    assert all(0.0 < d.availability <= 1.0 for d in mix.devices)
+    par = fleet.make_fleet("pareto-stragglers", 64, seed=3)
+    # Pareto slowdowns only ever slow clients down relative to reference
+    assert all(d.flops <= fleet.REF_FLOPS for d in par.devices)
+    with pytest.raises(ValueError):
+        fleet.make_fleet("datacenter", 4)
+
+
+# ---------------------------------------------------------------------------
+# sampling / pricing / weights
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 20), cpr=st.integers(0, 20),
+       oc=st.floats(1.0, 4.0))
+def test_sample_clients_overcommit_clamped(n, cpr, oc):
+    key = jax.random.PRNGKey(42)
+    got = server.sample_clients(key, n, min(cpr, n), overcommit=oc)
+    assert len(got) <= n
+    assert len(set(got)) == len(got)
+    base = server.sample_clients(key, n, min(cpr, n))
+    assert len(got) >= len(base)
+
+
+def test_sample_clients_default_overcommit_is_identity():
+    # overcommit=1.0 must be byte-for-byte the historical sampling call
+    key = jax.random.PRNGKey(7)
+    assert server.sample_clients(key, 10, 4) == server.sample_clients(
+        key, 10, 4, overcommit=1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.floats(0.0, 2.0))
+def test_staleness_weights_normalized_monotone(alpha):
+    counts = [16, 16, 16, 16]
+    w = simulation.staleness_weights(counts, [0, 1, 2, 5], alpha)
+    assert np.isclose(w.sum(), 1.0)
+    assert all(w[i] >= w[i + 1] - 1e-12 for i in range(len(w) - 1))
+    # zero staleness degenerates to plain sample-count weights
+    w0 = simulation.staleness_weights([8, 24], [0, 0], alpha)
+    np.testing.assert_allclose(w0, [0.25, 0.75])
+
+
+def test_pricing_scales_with_device_and_plan():
+    from repro.core import schedule as sched
+    fl = FLConfig(num_clients=2, rounds=4, schedule="lw_fedssl")
+    plans = sched.build_schedule(fl, 2)
+    kw = dict(batch=8, tokens=64, num_stages=2)
+    f_stage0 = simulation.plan_step_flops(CFG, plans[0], **kw)
+    f_stage1 = simulation.plan_step_flops(CFG, plans[-1], **kw)
+    assert f_stage1 > f_stage0 > 0      # deeper sub-model costs more
+    slow = fleet.DeviceProfile(
+        flops=fleet.REF_FLOPS / 4, mem_bw=fleet.REF_MEM_BW / 4,
+        down_bw=fleet.REF_DOWN_BW, up_bw=fleet.REF_UP_BW,
+        availability=1.0, j_per_flop=fleet.REF_J_PER_FLOP,
+        j_per_byte=fleet.REF_J_PER_BYTE)
+    kw2 = dict(steps=2, step_flops=f_stage0, step_bytes=1e6,
+               down_bytes=10**6, up_bytes=10**6)
+    ref = simulation.price_client_round(fleet.REFERENCE_DEVICE, **kw2)
+    slw = simulation.price_client_round(slow, **kw2)
+    assert slw.compute_s > ref.compute_s
+    assert slw.total_s > ref.total_s
+    assert ref.download_s > 0 and ref.upload_s > 0 and ref.energy_j > 0
+
+
+# ---------------------------------------------------------------------------
+# policy resolve logic (host-side, no training)
+# ---------------------------------------------------------------------------
+def _costs(times, energy=1.0):
+    return {c: simulation.ClientRoundCost(0.0, t, 0.0, energy)
+            for c, t in times.items()}
+
+
+def test_synchronous_policy_waits_for_slowest():
+    pol = simulation.make_policy("synchronous")
+    out = pol.resolve(0, [0, 1, 2], _costs({0: 1.0, 1: 5.0, 2: 2.0}),
+                      {0: True, 1: True, 2: False})
+    assert out.train_ids == (0, 1) and out.dropped == (2,)
+    assert out.wall_clock_s == 5.0 and out.device_seconds == 6.0
+
+
+def test_deadline_policy_drops_stragglers():
+    pol = simulation.make_policy("deadline", deadline_s=3.0, overcommit=2.0)
+    out = pol.resolve(0, [0, 1, 2, 3],
+                      _costs({0: 1.0, 1: 9.0, 2: 2.0, 3: 4.0}),
+                      {c: True for c in range(4)})
+    assert out.train_ids == (0, 2)          # 1 and 3 miss the deadline
+    assert set(out.dropped) == {1, 3}
+    assert out.wall_clock_s == 3.0          # server stops at the deadline
+    # cut clients burn device time up to the deadline only
+    assert out.device_seconds == 1.0 + 2.0 + 3.0 + 3.0
+    with pytest.raises(ValueError):
+        simulation.make_policy("deadline", overcommit=0.5)
+    with pytest.raises(ValueError):
+        simulation.make_policy("synchronous", deadline_s=1.0)
+    with pytest.raises(ValueError):
+        simulation.make_policy("fifo")
+
+
+def test_deadline_adaptive_quantile():
+    pol = simulation.make_policy("deadline", quantile=0.5)
+    times = {c: float(c + 1) for c in range(5)}
+    out = pol.resolve(0, list(range(5)), _costs(times),
+                      {c: True for c in range(5)})
+    assert out.deadline_s == 3.0            # median of 1..5
+    assert out.train_ids == (0, 1, 2)
+
+
+def test_buffered_async_staleness_and_flush():
+    pol = simulation.make_policy("buffered-async", buffer=2)
+    costs = _costs({0: 1.0, 1: 3.5, 2: 2.0})
+    avail = {c: True for c in range(3)}
+    out0 = pol.resolve(0, [0, 1, 2], costs, avail)
+    assert out0.train_ids == (0, 1, 2)
+    tree = {"w": jnp.ones((2,))}
+    _, fin0 = pol.complete(out0, costs, [16, 16, 16],
+                           [tree, tree, tree])
+    # the two earliest arrivals (0 at t=1, 2 at t=2) aggregate; 1 pends
+    assert fin0.aggregated == (0, 2)
+    assert fin0.staleness == (0, 0)
+    assert np.isclose(sum(fin0.weights), 1.0)
+    assert fin0.wall_clock_s == 2.0
+    out1 = pol.resolve(1, [0, 1, 2], costs, avail)
+    assert 1 not in out1.train_ids          # still busy from round 0
+    # relaunched 0 and 2 arrive at t=3 and t=4; 1's round-0 launch at
+    # t=3.5 slots between them and lands here with staleness 1
+    _, fin1 = pol.complete(out1, costs, [16, 16, 16],
+                           [tree] * len(out1.train_ids))
+    assert 1 in fin1.aggregated
+    assert fin1.staleness[fin1.aggregated.index(1)] == 1
+    # equal sample counts: the stale update gets the smallest weight
+    assert (fin1.weights[fin1.aggregated.index(1)] == min(fin1.weights))
+    # stage transition discards pending updates and reports them dropped
+    out2 = pol.resolve(2, [0, 1, 2], costs, avail)
+    pol.complete(out2, costs, [16, 16, 16], [tree] * len(out2.train_ids))
+    pol.begin_stage()
+    out3 = pol.resolve(3, [0, 1, 2], costs, avail)
+    assert out3.dropped != ()               # the flushed pending update
+
+
+# ---------------------------------------------------------------------------
+# driver integration
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_sync_uniform_bit_identical_to_no_simulator():
+    """The equivalence regression: synchronous policy + uniform fleet must
+    not perturb training at all (identical RNG chain, identical floats)."""
+    st0, h0, _ = run_driver(None, None)
+    st1, h1, sim = run_driver("synchronous", "uniform")
+    assert h0.loss == h1.loss               # exact, not allclose
+    for a, b in zip(jax.tree.leaves(st0), jax.tree.leaves(st1)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert h1.total_dropped == 0
+    assert len(h1.round_wall_clock) == len(h1.loss)
+    assert h0.round_wall_clock == []        # no sim => no sim accounting
+    assert h1.total_wall_clock > 0 and h1.total_energy > 0
+    # uniform fleet: every round's wall clock is one device's round time
+    assert h1.total_device_seconds >= h1.total_wall_clock
+
+
+@pytest.mark.slow
+def test_deadline_survivors_equal_plain_fedavg(monkeypatch):
+    """Deadline aggregation == plain FedAvg over the survivor subset:
+    replaying the recorded survivor sets through the sim-free driver
+    reproduces the deadline run bit for bit."""
+    st0, h0, _ = run_driver("deadline", "pareto-stragglers",
+                            policy_kw=(("overcommit", 1.5),))
+    assert h0.total_dropped > 0             # the test must exercise drops
+    survivor_sets = [list(p) for p in h0.participants]
+    monkeypatch.setattr(server, "sample_clients",
+                        lambda *a, **kw: survivor_sets.pop(0))
+    fl = FLConfig(num_clients=N_CLIENTS, rounds=4, local_epochs=1,
+                  clients_per_round=3, schedule="lw_fedssl")
+    st1, h1 = driver.run_fedssl(
+        CFG, SSLC, fl, TC, images=_IMAGES, client_indices=list(_INDICES),
+        key=jax.random.PRNGKey(0), sim=None)
+    assert h0.loss == h1.loss
+    for a, b in zip(jax.tree.leaves(st0), jax.tree.leaves(st1)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", simulation.POLICIES)
+def test_cross_engine_and_rerun_determinism(policy):
+    """Same seed => identical fleet, participants, drops and clock across
+    sequential and vmap, and across repeated runs of the same engine."""
+    _, hs, sim_s = run_driver(policy, "mobile-mix", engine="sequential")
+    _, hv, sim_v = run_driver(policy, "mobile-mix", engine="vmap")
+    assert sim_s.fleet.draw_signature() == sim_v.fleet.draw_signature()
+    for a, b in zip(sim_s.records, sim_v.records):
+        assert a == b                       # full RoundOutcome equality
+    assert hs.participants == hv.participants
+    assert hs.dropped_clients == hv.dropped_clients
+    assert hs.round_wall_clock == hv.round_wall_clock
+    assert hs.device_seconds == hv.device_seconds
+    np.testing.assert_allclose(hs.loss, hv.loss, rtol=0, atol=1e-5)
+    # repeated identical run (lru_cache bypass): fresh sim, same decisions
+    fl = FLConfig(num_clients=N_CLIENTS, rounds=4, local_epochs=1,
+                  clients_per_round=3, schedule="lw_fedssl")
+    sim2 = simulation.make_sim(
+        fleet.make_fleet("mobile-mix", N_CLIENTS, seed=0), policy,
+        num_clients=N_CLIENTS, seed=0)
+    _, h2 = driver.run_fedssl(
+        CFG, SSLC, fl, TC, images=_IMAGES, client_indices=list(_INDICES),
+        key=jax.random.PRNGKey(0), engine="sequential", sim=sim2)
+    assert h2.loss == hs.loss
+    assert sim2.records == sim_s.records
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", simulation.POLICIES)
+@pytest.mark.parametrize("profile", ("mobile-mix", "pareto-stragglers"))
+def test_policy_matrix(policy, profile):
+    """Every policy x fleet combination trains to finite losses and fills
+    the simulator accounting consistently."""
+    _, hist, sim = run_driver(policy, profile)
+    rounds = len(hist.loss)
+    assert all(np.isfinite(hist.loss))
+    assert (len(hist.round_wall_clock) == len(hist.device_seconds)
+            == len(hist.energy_joules) == len(hist.dropped_clients)
+            == len(hist.participants) == rounds)
+    assert hist.total_wall_clock > 0
+    assert hist.total_device_seconds >= hist.total_wall_clock * 0.999
+    assert hist.total_energy > 0
+    for rec in sim.records:
+        assert set(rec.train_ids) <= set(rec.cohort)
+        assert not (set(rec.dropped) & set(rec.aggregated))
+        if rec.weights is not None and rec.weights:
+            assert np.isclose(sum(rec.weights), 1.0)
+        assert len(rec.cohort) <= N_CLIENTS  # overcommit is clamped
+
+
+@pytest.mark.slow
+def test_wall_clock_to_loss():
+    _, hist, _ = run_driver("synchronous", "uniform")
+    best = min(hist.loss)
+    t = hist.wall_clock_to_loss(best)
+    assert t is not None
+    assert 0 < t <= hist.total_wall_clock + 1e-9
+    assert hist.wall_clock_to_loss(-1e9) is None
+
+
+# ---------------------------------------------------------------------------
+# bench schema
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_simulation_bench_schema():
+    from benchmarks.run import bench_simulation
+    from benchmarks.schemas import validate_simulation_bench
+    doc = bench_simulation(rounds=2, clients=3, clients_per_round=2,
+                           schedules=("e2e",), fleets=("uniform",),
+                           seed=0, write=False)
+    assert validate_simulation_bench(doc) == []
+    assert len(doc["rows"]) == len(simulation.POLICIES)
+    # the validator actually catches drift
+    bad = {**doc, "rows": [dict(doc["rows"][0], energy_j="lots",
+                                extra_field=1)]}
+    errs = validate_simulation_bench(bad)
+    assert any("energy_j" in e for e in errs)
+    assert any("extra_field" in e for e in errs)
+    assert validate_simulation_bench({}) != []
+
+
+def test_checked_in_bench_artifact_if_present():
+    import json
+    import pathlib
+    from benchmarks.schemas import validate_simulation_bench
+    out = (pathlib.Path(__file__).resolve().parents[1] / "results"
+           / "simulation_bench.json")
+    if not out.exists():
+        pytest.skip("results/simulation_bench.json not generated yet")
+    assert validate_simulation_bench(json.loads(out.read_text())) == []
