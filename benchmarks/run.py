@@ -151,9 +151,9 @@ def bench_kernels():
     q = jax.random.normal(key, (2, 256, 4, 64))
     k = jax.random.normal(key, (2, 256, 2, 64))
     v = jax.random.normal(key, (2, 256, 2, 64))
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = ops.flash_attention(q, k, v, causal=True, interpret=True)
-    t_k = time.time() - t0
+    t_k = time.perf_counter() - t0
     want = ref.sdpa_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                         v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
     err = float(jnp.max(jnp.abs(out - want)))
@@ -163,23 +163,23 @@ def bench_kernels():
     a = -dt * 0.1
     Bm = jax.random.normal(key, (2, 256, 64))
     Cm = jax.random.normal(key, (2, 256, 64))
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = ops.ssd_scan(xh, dt, a, Bm, Cm, interpret=True)
-    rows.append(("mamba2_ssd_scan", time.time() - t0,
+    rows.append(("mamba2_ssd_scan", time.perf_counter() - t0,
                  float(jnp.max(jnp.abs(
                      out - ref.ssd_scan_ref(xh, dt, a, Bm, Cm))))))
     qq = jax.random.normal(key, (256, 128))
     kk = jax.random.normal(key, (256, 128))
-    t0 = time.time()
+    t0 = time.perf_counter()
     got = ops.fused_info_nce(qq, kk, 0.2, interpret=True)
     from repro.core.losses import info_nce
-    rows.append(("fused_info_nce", time.time() - t0,
+    rows.append(("fused_info_nce", time.perf_counter() - t0,
                  abs(float(got) - float(info_nce(qq, kk, 0.2)))))
     x = jax.random.normal(key, (1024, 256))
     s = jnp.ones((256,))
-    t0 = time.time()
+    t0 = time.perf_counter()
     got = ops.fused_rmsnorm(x, s, interpret=True)
-    rows.append(("fused_rmsnorm", time.time() - t0,
+    rows.append(("fused_rmsnorm", time.perf_counter() - t0,
                  float(jnp.max(jnp.abs(got - ref.rmsnorm_ref(x, s))))))
     for name, dt_, err in rows:
         print(f"{name:20s} first-call {dt_ * 1e3:8.1f}ms  maxerr {err:.2e}")
@@ -237,10 +237,10 @@ def bench_engine(rounds=8, clients=8):
                   schedule="e2e")
     rps = {}
     for engine in ("sequential", "vmap"):
-        times = [time.time()]
+        times = [time.perf_counter()]
         _, hist = run_fedssl(cfg, sslc, fl, tc, images=imgs,
                              client_indices=idx, key=key, engine=engine,
-                             log=lambda m: times.append(time.time()))
+                             log=lambda m: times.append(time.perf_counter()))
         total = times[-1] - times[0]
         rps[engine] = (rounds - 1) / (times[-1] - times[1])
         print(f"{engine:12s} {total:6.1f}s total (incl. compile)  "
@@ -251,19 +251,28 @@ def bench_engine(rounds=8, clients=8):
     return rps
 
 
-def bench_transport(reps=5):
-    """Wire transport: pack/unpack throughput and per-codec compression
-    ratio per schedule (mid-training round, full-size ViT-T + MoCo heads).
-    Emits one BENCH json line and writes results/transport_bench.json for
-    the CI artifact."""
-    print("\n== Transport: payload pack/unpack + codec compression ==")
+def bench_transport(reps=5, codec_reps=3):
+    """Wire transport, xla vs pallas engines: pack/unpack throughput per
+    schedule (mid-training round, full-size ViT-T + MoCo heads), per-codec
+    compression ratios, and codec encode/decode throughput on the largest
+    (e2e) payload. Validates against ``benchmarks.schemas``, emits one
+    BENCH json line and writes results/transport_bench.json for the CI
+    artifact.
+
+    Codec throughput uses ``codec_reps`` (the jit'd XLA top-k encode runs
+    seconds per call on a 26M-element payload; best-of-3 keeps the bench
+    under a minute without changing the min-statistics convention)."""
+    print("\n== Transport: pack/unpack + codecs, xla vs pallas ==")
     import jax
-    import jax.numpy as jnp
+    from benchmarks.schemas import validate_transport_bench
+    from benchmarks.timing import bench_seconds, gbps
     from repro.configs.base import FLConfig, SSLConfig, load_arch
     from repro.core import schedule as sched
     from repro.core import ssl as ssl_mod
     from repro.federated import comm
-    from repro.federated.transport import (Transport, pack_stage_payload,
+    from repro.federated.transport import (Transport, kernel_codec_fns,
+                                           kernel_pack, kernel_unpack,
+                                           make_codec, pack_stage_payload,
                                            unpack_stage_payload)
 
     cfg = load_arch("vit-tiny")
@@ -272,31 +281,39 @@ def bench_transport(reps=5):
     online = ssl_mod.ssl_init(jax.random.PRNGKey(0), enc, sslc)["online"]
     codecs = ("fp32", "fp16", "bf16", "int8", "topk:0.1")
     rows = []
+    e2e_spec = None
     for schedule in SCHEDULES:
         plans = sched.build_schedule(FLConfig(rounds=24, schedule=schedule),
                                      cfg.num_layers)
         plan = plans[len(plans) // 2]
         t0s = Transport("fp32")
         spec = t0s.plan_specs(online, plan)["upload"]
-        pack = jax.jit(lambda p: pack_stage_payload(p, spec))
-        unpack = jax.jit(lambda b, f: unpack_stage_payload(b, f, spec))
-        flat = pack(online)
-        jax.block_until_ready(flat)
-        t0 = time.time()
-        for _ in range(reps):
-            jax.block_until_ready(pack(online))
-        t_pack = (time.time() - t0) / reps
-        jax.block_until_ready(unpack(online, flat))
-        t0 = time.time()
-        for _ in range(reps):
-            jax.block_until_ready(unpack(online, flat))
-        t_unpack = (time.time() - t0) / reps
-        mb = spec.payload_bytes / 1e6
+        if schedule == "e2e":
+            e2e_spec = spec
+        nbytes = spec.payload_bytes
+        xpack = jax.jit(lambda p: pack_stage_payload(p, spec))
+        xunpack = jax.jit(lambda b, f: unpack_stage_payload(b, f, spec))
+        flat_x = jax.block_until_ready(xpack(online))
+        flat_h = kernel_pack(online, spec)
+        pack_s = {"xla": bench_seconds(xpack, online, reps=reps),
+                  "pallas": bench_seconds(
+                      lambda: kernel_pack(online, spec), reps=reps)}
+        unpack_s = {"xla": bench_seconds(xunpack, online, flat_x,
+                                         reps=reps),
+                    "pallas": bench_seconds(
+                        lambda: kernel_unpack(online, flat_h, spec),
+                        reps=reps)}
+        mb = nbytes / 1e6
         # throughput figures cover the upload payload; per-codec wire_mb /
         # ratio below cover the full round trip (download + upload)
         row = {"schedule": schedule, "upload_payload_mb": round(mb, 3),
-               "pack_gbps": round(mb / 1e3 / max(t_pack, 1e-9), 3),
-               "unpack_gbps": round(mb / 1e3 / max(t_unpack, 1e-9), 3),
+               "pack_gbps": {e: round(gbps(nbytes, s), 3)
+                             for e, s in pack_s.items()},
+               "unpack_gbps": {e: round(gbps(nbytes, s), 3)
+                               for e, s in unpack_s.items()},
+               "pack_speedup": round(pack_s["xla"] / pack_s["pallas"], 2),
+               "unpack_speedup": round(
+                   unpack_s["xla"] / unpack_s["pallas"], 2),
                "codecs": {}}
         analytic = comm.round_comm_bytes(online, plan)
         for name in codecs:
@@ -313,18 +330,62 @@ def bench_transport(reps=5):
             if name == "fp32":
                 assert wire == analytic, (wire, analytic)
         rows.append(row)
-        cs = "  ".join(f"{n} {c['ratio']:.2f}x"
-                       for n, c in row["codecs"].items())
         print(f"{NAMES[schedule]:12s} payload {mb:7.2f}MB  "
-              f"pack {row['pack_gbps']:5.2f}GB/s "
-              f"unpack {row['unpack_gbps']:5.2f}GB/s  {cs}")
+              f"pack {row['pack_gbps']['xla']:6.2f} -> "
+              f"{row['pack_gbps']['pallas']:6.2f} GB/s "
+              f"({row['pack_speedup']:.1f}x)  "
+              f"unpack {row['unpack_gbps']['xla']:6.2f} -> "
+              f"{row['unpack_gbps']['pallas']:6.2f} GB/s "
+              f"({row['unpack_speedup']:.1f}x)")
+
+    # codec encode/decode throughput, timed once on the largest payload
+    codec_rows = []
+    nbytes = e2e_spec.payload_bytes
+    flat_x = jax.block_until_ready(
+        jax.jit(lambda p: pack_stage_payload(p, e2e_spec))(online))
+    flat_h = kernel_pack(online, e2e_spec)
+    for name in codecs:
+        codec = make_codec(name)
+        xenc = jax.jit(lambda f: codec.encode(f, e2e_spec))
+        xdec = jax.jit(lambda w: codec.decode(w, e2e_spec))
+        kenc, kdec = kernel_codec_fns(codec, e2e_spec)
+        wire_x = jax.block_until_ready(xenc(flat_x))
+        wire_h = kenc(flat_h)
+        enc_s = {"xla": bench_seconds(xenc, flat_x, reps=codec_reps,
+                                      warmup=1),
+                 "pallas": bench_seconds(kenc, flat_h, reps=codec_reps,
+                                         warmup=1)}
+        dec_s = {"xla": bench_seconds(xdec, wire_x, reps=codec_reps,
+                                      warmup=1),
+                 "pallas": bench_seconds(kdec, wire_h, reps=codec_reps,
+                                         warmup=1)}
+        crow = {"codec": name, "payload_mb": round(nbytes / 1e6, 3),
+                "encode_gbps": {e: round(gbps(nbytes, s), 3)
+                                for e, s in enc_s.items()},
+                "decode_gbps": {e: round(gbps(nbytes, s), 3)
+                                for e, s in dec_s.items()}}
+        codec_rows.append(crow)
+        print(f"codec {name:9s} enc {crow['encode_gbps']['xla']:8.2f} -> "
+              f"{crow['encode_gbps']['pallas']:8.2f} GB/s   "
+              f"dec {crow['decode_gbps']['xla']:8.2f} -> "
+              f"{crow['decode_gbps']['pallas']:8.2f} GB/s")
+
+    doc = {"bench": "transport",
+           "config": {"arch": "vit-tiny", "reps": reps,
+                      "codec_reps": codec_reps, "codecs": list(codecs),
+                      "engines": ["xla", "pallas"],
+                      "schedules": list(SCHEDULES)},
+           "rows": rows, "codec_rows": codec_rows}
+    errors = validate_transport_bench(doc)
+    assert not errors, errors
     RESULTS.mkdir(exist_ok=True)
     out = RESULTS / "transport_bench.json"
-    out.write_text(json.dumps(rows, indent=1))
-    print("BENCH " + json.dumps({"bench": "transport", "rows": rows}))
-    print(f"(fp32 wire bytes == analytic comm bytes verified; "
-          f"json -> {out})")
-    return rows
+    out.write_text(json.dumps(doc, indent=1))
+    print("BENCH " + json.dumps({"bench": "transport", "rows": len(rows),
+                                 "codec_rows": len(codec_rows)}))
+    print(f"(schema-validated; fp32 wire bytes == analytic comm bytes "
+          f"verified; json -> {out})")
+    return doc
 
 
 def bench_simulation(rounds=6, clients=6, clients_per_round=4,
@@ -474,10 +535,10 @@ def main():
         todo.update(FULL_BENCHES)
     if args.only:
         todo = {args.only: {**BENCHES, **FULL_BENCHES}[args.only]}
-    t0 = time.time()
+    t0 = time.perf_counter()
     for name, fn in todo.items():
         fn()
-    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+    print(f"\nall benchmarks done in {time.perf_counter() - t0:.1f}s")
 
 
 if __name__ == "__main__":

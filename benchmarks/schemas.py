@@ -4,9 +4,14 @@ A stale results file once sketched a fleet-simulator schema whose code
 never landed; to keep bench JSON from silently drifting away from what
 the code emits again, the writer (``benchmarks.run``) and a tier-1 test
 (``tests/test_simulation.py``) both validate against the single
-definition here. ``validate_simulation_bench`` returns a list of
-human-readable problems (empty = valid) instead of raising, so callers
-can report every issue at once.
+definition here. The validators return a list of human-readable problems
+(empty = valid) instead of raising, so callers can report every issue at
+once.
+
+Two documents are covered: the fleet-simulation bench
+(``validate_simulation_bench``) and the wire-transport bench
+(``validate_transport_bench`` — per-schedule pack/unpack throughput for
+both wire engines plus one codec-throughput row per codec).
 """
 from __future__ import annotations
 
@@ -73,4 +78,109 @@ def validate_simulation_bench(doc: Any) -> List[str]:
         return errors
     for i, row in enumerate(rows):
         _check_row(i, row, errors)
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# transport bench
+# ---------------------------------------------------------------------------
+TRANSPORT_ENGINES = ("xla", "pallas")
+
+# per-schedule row: pack/unpack GB/s per wire engine + per-codec round
+# wire size / compression ratio (sizes are analytic, not timed).
+TRANSPORT_ROW_SCHEMA: Dict[str, Any] = {
+    "schedule": str,
+    "upload_payload_mb": float,
+    "pack_gbps": dict,
+    "unpack_gbps": dict,
+    "pack_speedup": float,
+    "unpack_speedup": float,
+    "codecs": dict,
+}
+
+# one row per codec, timed on the largest (e2e) upload payload.
+TRANSPORT_CODEC_ROW_SCHEMA: Dict[str, Any] = {
+    "codec": str,
+    "payload_mb": float,
+    "encode_gbps": dict,
+    "decode_gbps": dict,
+}
+
+TRANSPORT_TOP_KEYS = ("bench", "config", "rows", "codec_rows")
+
+
+def _check_engine_map(where: str, v: Any, errors: List[str]):
+    if not isinstance(v, dict):
+        return
+    for eng in TRANSPORT_ENGINES:
+        if eng not in v:
+            errors.append(f"{where}: missing engine '{eng}'")
+        elif not isinstance(v.get(eng), float):
+            errors.append(f"{where}.{eng}: expected float, "
+                          f"got {type(v[eng]).__name__}")
+    for eng in v:
+        if eng not in TRANSPORT_ENGINES:
+            errors.append(f"{where}: unknown engine '{eng}'")
+
+
+def _check_fields(where: str, row: Any, schema: Dict[str, Any],
+                  errors: List[str]):
+    if not isinstance(row, dict):
+        errors.append(f"{where}: expected object, got {type(row).__name__}")
+        return
+    for field, types in schema.items():
+        if field not in row:
+            errors.append(f"{where}: missing field '{field}'")
+            continue
+        tt = types if isinstance(types, tuple) else (types,)
+        v = row[field]
+        ok = isinstance(v, tt) and not (isinstance(v, bool)
+                                        and bool not in tt)
+        if not ok:
+            errors.append(f"{where}.{field}: expected "
+                          f"{'/'.join(t.__name__ for t in tt)}, "
+                          f"got {type(v).__name__} ({v!r})")
+    for field in row:
+        if field not in schema:
+            errors.append(f"{where}: unknown field '{field}' "
+                          f"(update benchmarks/schemas.py)")
+
+
+def validate_transport_bench(doc: Any) -> List[str]:
+    """Validate a transport-bench document; returns a list of problems."""
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"top level: expected object, got {type(doc).__name__}"]
+    for k in TRANSPORT_TOP_KEYS:
+        if k not in doc:
+            errors.append(f"top level: missing key '{k}'")
+    if doc.get("bench") != "transport":
+        errors.append(f"bench: expected 'transport', "
+                      f"got {doc.get('bench')!r}")
+    rows = doc.get("rows", [])
+    if not isinstance(rows, list) or not rows:
+        errors.append("rows: expected a non-empty list")
+        return errors
+    for i, row in enumerate(rows):
+        _check_fields(f"rows[{i}]", row, TRANSPORT_ROW_SCHEMA, errors)
+        if isinstance(row, dict):
+            for f in ("pack_gbps", "unpack_gbps"):
+                _check_engine_map(f"rows[{i}].{f}", row.get(f), errors)
+            codecs = row.get("codecs")
+            if isinstance(codecs, dict):
+                for name, c in codecs.items():
+                    _check_fields(f"rows[{i}].codecs[{name}]", c,
+                                  {"round_wire_mb": float, "ratio": float},
+                                  errors)
+    crows = doc.get("codec_rows", [])
+    if not isinstance(crows, list) or not crows:
+        errors.append("codec_rows: expected a non-empty list")
+        return errors
+    for i, row in enumerate(crows):
+        _check_fields(f"codec_rows[{i}]", row, TRANSPORT_CODEC_ROW_SCHEMA,
+                      errors)
+        if isinstance(row, dict):
+            for f in ("encode_gbps", "decode_gbps"):
+                _check_engine_map(f"codec_rows[{i}].{f}", row.get(f),
+                                  errors)
     return errors

@@ -101,13 +101,17 @@ class FLHistory:
 def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                aux_images=None, key=None, encoder=None, image_size: int = 32,
                log=None, engine: str = "sequential",
-               codec: str = "fp32", sim=None) -> tuple:
+               codec: str = "fp32", transport_kernels: str = "xla",
+               sim=None) -> tuple:
     """Run the FL process; returns (final_state, FLHistory).
 
     images: (n, H, W, 3) pooled training pool; client_indices: list of index
     arrays (one per client); aux_images: D_g for server calibration;
     engine: "sequential" (reference) or "vmap" (one dispatch per round);
     codec: wire compression (transport.CODECS — fp32/fp16/bf16/int8/topk);
+    transport_kernels: wire-path engine (transport.TRANSPORT_KERNELS) —
+    "xla" (jit'd slice/concat reference) or "pallas" (fused pack/codec
+    kernels; fp32/fp16/bf16 bit-identical, int8/topk within 1e-6);
     sim: optional ``simulation.Simulation`` (fleet + round policy). With
     ``sim=None`` — or the synchronous policy over a uniform fleet — the
     training numerics are bit-identical to the pre-simulator driver; other
@@ -124,7 +128,8 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
     base_lr = scaled_base_lr(train_cfg.base_lr, train_cfg.batch_size)
     hist = FLHistory()
 
-    wire = transport_mod.Transport(codec, include_heads=fl.include_heads)
+    wire = transport_mod.Transport(codec, include_heads=fl.include_heads,
+                                   kernels=transport_kernels)
     eng = engine_mod.make_engine(
         engine, encoder=encoder, ssl_cfg=ssl_cfg, opt=opt, fl=fl,
         train_cfg=train_cfg, images=images, client_indices=client_indices,

@@ -28,6 +28,15 @@ vmap engine that whole path — pack, codec, error-feedback residual
 update, FedAvg — is vmapped over clients inside the same jit'd round
 program. With the identity (fp32) codec the round is bit-identical to
 pre-transport behavior. See docs/transport.md.
+
+The transport's host-called wire path (broadcast / upload decode) itself
+has two engines, selected by ``Transport(kernels=...)`` /
+``--transport-kernels``: the jit'd XLA reference and the fused Pallas
+pack/codec kernels (docs/kernels.md). Both round engines pick that up
+transparently — the sequential engine through ``aggregate_uploads``, the
+vmap engine for its broadcasts; the vmap engine's *in-program* upload
+path (``make_wire_transform``) stays XLA by design, since it is traced
+into the jit'd round program.
 """
 from __future__ import annotations
 

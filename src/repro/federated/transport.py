@@ -39,6 +39,19 @@ Payload membership (which leaves travel, per direction) is the shared
 bytes count the same tensors. All pack/encode/decode/unpack functions are
 pure JAX: the vectorized engine vmaps them over the client axis inside its
 single jit'd round program. See docs/transport.md.
+
+Two wire-path engines (``kernels=`` / ``--transport-kernels``):
+
+  xla       the legacy leaf-by-leaf slice/cast/concat path above.
+  pallas    the fused kernels in ``repro.kernels`` (slot-table
+            gather/scatter, fused int8 quant, top-k with on-chip
+            error-feedback) for the host-called wire functions —
+            ``_pack_fn`` / ``_upload_fn`` / ``_bcast_fn`` /
+            ``_bcast_delta_fn`` — used by the driver broadcast, the
+            sequential engine and the fleet simulator. The vmap engine's
+            in-program ``make_wire_transform`` intentionally stays XLA:
+            it is fused into that engine's single jit'd round program,
+            which this flag must not touch. See docs/kernels.md.
 """
 from __future__ import annotations
 
@@ -51,9 +64,12 @@ import numpy as np
 
 from repro.federated import aggregate
 from repro.federated.leaves import classify_leaf, path_keys
+from repro.kernels import hostwire
+from repro.kernels import ops as kops
 
 WIRE_DTYPE = jnp.float32          # payload element dtype before encoding
 CODECS = ("fp32", "fp16", "bf16", "int8", "topk")
+TRANSPORT_KERNELS = ("xla", "pallas")
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +309,125 @@ def wire_nbytes(wire_shapes) -> int:
 
 
 # ---------------------------------------------------------------------------
+# fused kernel wire path (kernels="pallas"): the PayloadSpec rendered as the
+# static slot tables the repro.kernels wire kernels consume
+# ---------------------------------------------------------------------------
+def _slot_src_offset(slot: LeafSlot) -> int:
+    """Element offset of the slot's range inside its raveled leaf: stacked
+    slots start at row ``lo``, whole-tensor slots at 0."""
+    if slot.kind != "stacked":
+        return 0
+    return slot.lo * (slot.size // (slot.hi - slot.lo))
+
+
+def slot_pack_layout(spec: PayloadSpec) -> Tuple[Tuple[int, int, int], ...]:
+    """((src_off, dst_off, size), ...) gather table for ``kops.wire_pack``."""
+    return tuple((_slot_src_offset(s), s.offset, s.size) for s in spec.slots)
+
+
+def int8_segs(spec: PayloadSpec) -> Tuple[Tuple, int]:
+    """(((offset, size, channels, scale_offset), ...), n_scales) quant
+    table for ``kops.wire_int8_encode/decode`` — channel choice shared
+    with the XLA codec (``_int8_channels``)."""
+    segs, soff = [], 0
+    for s in spec.slots:
+        ch = _int8_channels(s)
+        segs.append((s.offset, s.size, ch, soff))
+        soff += ch
+    return tuple(segs), soff
+
+
+def _slot_leaves(tree, spec: PayloadSpec):
+    """Leaves of ``tree`` in slot order (payload membership only)."""
+    by_path = {path_keys(p): a
+               for p, a in jax.tree_util.tree_flatten_with_path(tree)[0]}
+    return [by_path[s.path] for s in spec.slots]
+
+
+def kernel_pack(tree, spec: PayloadSpec):
+    """Fused-kernel ``pack_stage_payload``: one slot-table gather."""
+    return kops.wire_pack(_slot_leaves(tree, spec), slot_pack_layout(spec),
+                          spec.total)
+
+
+def kernel_unpack(base, flat, spec: PayloadSpec):
+    """Fused-kernel ``unpack_stage_payload``: one slot-table scatter over
+    the base leaves; leaves outside the spec keep the base value."""
+    with_paths, treedef = jax.tree_util.tree_flatten_with_path(base)
+    by_path = {s.path: s for s in spec.slots}
+    items = []                    # (leaf position, slot, base leaf)
+    for i, (p, a) in enumerate(with_paths):
+        s = by_path.get(path_keys(p))
+        if s is not None:
+            items.append((i, s, a))
+    layout = tuple(
+        (_slot_src_offset(s), s.offset, s.size,
+         s.size == int(np.prod(a.shape))) for _, s, a in items)
+    outs = kops.wire_unpack(flat, [a for _, _, a in items], layout)
+    leaves = [a for _, a in with_paths]
+    for (i, _, a), out in zip(items, outs):
+        leaves[i] = out.reshape(a.shape)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _sparse_add(base_flat, idx, val, total: int):
+    """base + scatter(idx, val) without materializing the dense decoded
+    delta; numpy fast path when the kernel engine returned host arrays."""
+    if isinstance(idx, np.ndarray):
+        base = np.asarray(base_flat)
+        out = hostwire.wire_buffer(total)
+        np.copyto(out, base, casting="unsafe")
+        out[idx] += val
+        return out
+    return jnp.asarray(base_flat, jnp.float32).at[idx].add(val)
+
+
+def kernel_codec_fns(codec, spec: PayloadSpec):
+    """(encode, decode) host-callable pair over the flat payload through
+    the fused kernel wire path — the ``kernels="pallas"`` counterpart of
+    ``codec.encode``/``codec.decode``, wire-format compatible (same dict
+    keys/dtypes). Top-k is delta-only and handled by the delta wire
+    functions (``kops.wire_topk_encode_ef``), not here; for bench/parity
+    purposes this returns its non-delta form (sparsify the payload
+    itself)."""
+    name = codec.name
+    if name == "fp32":
+        return (lambda flat: {"q": flat}), (lambda wire: wire["q"])
+    if name in ("fp16", "bf16"):
+        dtype = codec.dtype
+        return (lambda flat: {"q": kops.wire_cast_encode(flat, dtype)},
+                lambda wire: kops.wire_cast_decode(wire["q"]))
+    if name == "int8":
+        segs, nscales = int8_segs(spec)
+
+        def enc(flat):
+            q, scales = kops.wire_int8_encode(flat, segs, nscales)
+            return {"q": q, "scale": scales}
+
+        def dec(wire):
+            return kops.wire_int8_decode(wire["q"], wire["scale"], segs,
+                                         spec.total)
+        return enc, dec
+    if name.startswith("topk"):
+        k = codec.k_for(spec)
+
+        def enc(flat):
+            if isinstance(flat, np.ndarray):
+                ref = hostwire.wire_buffer(flat.shape[0])
+                ref.fill(0.0)
+            else:
+                ref = jnp.zeros_like(flat)
+            idx, val, _ = kops.wire_topk_encode_ef(flat, ref, None, k)
+            return {"idx": idx, "val": val}
+
+        def dec(wire):
+            return kops.wire_topk_decode(wire["idx"], wire["val"],
+                                         spec.total)
+        return enc, dec
+    raise ValueError(f"no kernel codec path for '{name}'")
+
+
+# ---------------------------------------------------------------------------
 # transport: spec/program caches, residual store, measured byte accounting
 # ---------------------------------------------------------------------------
 class Transport:
@@ -300,9 +435,14 @@ class Transport:
     per-client error-feedback residuals, and the measured wire-byte stats
     the driver folds into ``FLHistory``."""
 
-    def __init__(self, codec="fp32", *, include_heads: bool = True):
+    def __init__(self, codec="fp32", *, include_heads: bool = True,
+                 kernels: str = "xla"):
+        if kernels not in TRANSPORT_KERNELS:
+            raise ValueError(f"unknown transport kernels '{kernels}'; "
+                             f"one of {TRANSPORT_KERNELS}")
         self.codec = make_codec(codec) if isinstance(codec, str) else codec
         self.include_heads = include_heads
+        self.kernels = kernels
         self._specs: Dict[Tuple, PayloadSpec] = {}
         self._wire_bytes: Dict[Tuple, int] = {}
         self._roundtrips: Dict[Tuple, object] = {}
@@ -356,22 +496,57 @@ class Transport:
         return unpack_stage_payload(base, full, spec), new_res
 
     def _upload_fn(self, spec: PayloadSpec):
-        """jit'd (base, ref_flat, src, residual) -> (decoded tree, new
-        residual) for the sequential engine's per-client loop; the shared
-        reference is packed once per round, not once per client."""
+        """(base, ref_flat, src, residual) -> (decoded tree, new residual)
+        for the sequential engine's per-client loop; the shared reference
+        is packed once per round, not once per client. jit'd XLA in
+        ``kernels="xla"`` mode, the fused kernel wire path in ``pallas``.
+        """
         key = ("up", spec.sig)
         if key not in self._roundtrips:
-            self._roundtrips[key] = jax.jit(
-                lambda base, ref_flat, src, res: self._upload_one(
-                    src, base, ref_flat, res, spec))
+            if self.kernels == "pallas":
+                self._roundtrips[key] = self._kernel_upload_fn(spec)
+            else:
+                self._roundtrips[key] = jax.jit(
+                    lambda base, ref_flat, src, res: self._upload_one(
+                        src, base, ref_flat, res, spec))
         return self._roundtrips[key]
 
     def _pack_fn(self, spec: PayloadSpec):
         key = ("pack", spec.sig)
         if key not in self._roundtrips:
-            self._roundtrips[key] = jax.jit(
-                lambda tree: pack_stage_payload(tree, spec))
+            if self.kernels == "pallas":
+                self._roundtrips[key] = lambda tree: kernel_pack(tree, spec)
+            else:
+                self._roundtrips[key] = jax.jit(
+                    lambda tree: pack_stage_payload(tree, spec))
         return self._roundtrips[key]
+
+    # -- fused kernel wire path (kernels="pallas") --------------------------
+    def _kernel_roundtrip(self, spec: PayloadSpec):
+        """Host-callable encode+decode through the fused kernels for the
+        non-delta codecs; see ``kernel_codec_fns`` for the split form."""
+        enc, dec = kernel_codec_fns(self.codec, spec)
+        return lambda flat: dec(enc(flat))
+
+    def _kernel_upload_fn(self, spec: PayloadSpec):
+        codec = self.codec
+        if codec.delta:
+            assert isinstance(codec, TopKCodec), codec.name
+            k = codec.k_for(spec)
+
+            def fn(base, ref_flat, src, res):
+                flat = kernel_pack(src, spec)
+                idx, val, new_res = kops.wire_topk_encode_ef(
+                    flat, ref_flat, res, k)
+                full = _sparse_add(ref_flat, idx, val, spec.total)
+                return kernel_unpack(base, full, spec), new_res
+        else:
+            roundtrip = self._kernel_roundtrip(spec)
+
+            def fn(base, ref_flat, src, res):
+                dec = roundtrip(kernel_pack(src, spec))
+                return kernel_unpack(base, dec, spec), res
+        return fn
 
     def make_wire_transform(self, spec: PayloadSpec):
         """Pure function for the vectorized engine: (client-stacked trees,
@@ -413,22 +588,29 @@ class Transport:
 
     # -- driver-facing operations -------------------------------------------
     def _bcast_fn(self, spec: PayloadSpec):
-        """jit'd non-delta broadcast: (online) -> decoded client view."""
+        """Non-delta broadcast: (online) -> decoded client view (jit'd
+        XLA, or the fused kernel wire path under ``kernels="pallas"``)."""
         key = ("down", spec.sig)
         if key not in self._roundtrips:
             codec = self.codec
+            if self.kernels == "pallas":
+                roundtrip = self._kernel_roundtrip(spec)
 
-            @jax.jit
-            def fn(online):
-                flat = pack_stage_payload(online, spec)
-                dec = codec.decode(codec.encode(flat, spec), spec)
-                return unpack_stage_payload(online, dec, spec)
+                def fn(online):
+                    dec = roundtrip(kernel_pack(online, spec))
+                    return kernel_unpack(online, dec, spec)
+            else:
+                @jax.jit
+                def fn(online):
+                    flat = pack_stage_payload(online, spec)
+                    dec = codec.decode(codec.encode(flat, spec), spec)
+                    return unpack_stage_payload(online, dec, spec)
 
             self._roundtrips[key] = fn
         return self._roundtrips[key]
 
     def _bcast_delta_fn(self, spec: PayloadSpec):
-        """jit'd delta broadcast: (online, mirror flat) -> (client view,
+        """Delta broadcast: (online, mirror flat) -> (client view,
         new mirror). The mirror is the server's record of what clients
         already hold; sparsifying (model - mirror) and advancing the
         mirror by the *decoded* delta is error feedback in itself — what a
@@ -436,14 +618,26 @@ class Transport:
         key = ("down_delta", spec.sig)
         if key not in self._roundtrips:
             codec = self.codec
+            if self.kernels == "pallas":
+                assert isinstance(codec, TopKCodec), codec.name
+                k = codec.k_for(spec)
 
-            @jax.jit
-            def fn(online, mirror):
-                flat = pack_stage_payload(online, spec)
-                dec = codec.decode(codec.encode(flat - mirror, spec), spec)
-                new_mirror = mirror + dec
-                return unpack_stage_payload(online, new_mirror,
-                                            spec), new_mirror
+                def fn(online, mirror):
+                    flat = kernel_pack(online, spec)
+                    idx, val, _ = kops.wire_topk_encode_ef(
+                        flat, mirror, None, k)
+                    new_mirror = _sparse_add(mirror, idx, val, spec.total)
+                    return kernel_unpack(online, new_mirror,
+                                         spec), new_mirror
+            else:
+                @jax.jit
+                def fn(online, mirror):
+                    flat = pack_stage_payload(online, spec)
+                    dec = codec.decode(codec.encode(flat - mirror, spec),
+                                       spec)
+                    new_mirror = mirror + dec
+                    return unpack_stage_payload(online, new_mirror,
+                                                spec), new_mirror
 
             self._roundtrips[key] = fn
         return self._roundtrips[key]
@@ -463,8 +657,11 @@ class Transport:
         else:
             held = self._mirror
             if held is None or held[0] != spec.sig:
-                flat = pack_stage_payload(online, spec)
-                view = unpack_stage_payload(online, flat, spec)
+                flat = self._pack_fn(spec)(online)
+                if self.kernels == "pallas":
+                    view = kernel_unpack(online, flat, spec)
+                else:
+                    view = unpack_stage_payload(online, flat, spec)
                 self._mirror = (spec.sig, flat)
                 wire = spec.payload_bytes          # dense sync round
             else:

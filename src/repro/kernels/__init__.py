@@ -4,5 +4,11 @@
 #   mamba2_scan     — chunked SSD scan with VMEM-resident state
 #   infonce         — fused (B,B) contrastive logits + cross-entropy
 #   rmsnorm         — fused row-blocked RMSNorm
+#   pack            — transport wire pack/unpack (slot-table gather/scatter DMA)
+#   wire_codecs     — fused int8 per-channel quant + top-k error-feedback
+# The wire_* wrappers dispatch TPU -> native Pallas, interpret mode for CI,
+# and a numpy host engine (hostwire) as the CPU fast path; see ops.py.
 from repro.kernels.ops import (  # noqa: F401
-    flash_attention, fused_info_nce, fused_rmsnorm, ssd_scan)
+    flash_attention, fused_info_nce, fused_rmsnorm, ssd_scan,
+    wire_cast_decode, wire_cast_encode, wire_int8_decode, wire_int8_encode,
+    wire_pack, wire_topk_decode, wire_topk_encode_ef, wire_unpack)

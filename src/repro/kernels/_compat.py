@@ -4,6 +4,8 @@
 dataclass is ``pltpu.TPUCompilerParams``. Kernels import it from here so
 they run on both.
 """
+import dataclasses
+
 from jax.experimental.pallas import tpu as pltpu
 
 try:
@@ -15,3 +17,13 @@ except AttributeError:
         raise ImportError(
             "jax.experimental.pallas.tpu exposes neither CompilerParams "
             "nor TPUCompilerParams; this jax version is unsupported") from e
+
+_PARAM_FIELDS = {f.name for f in dataclasses.fields(CompilerParams)}
+
+
+def make_compiler_params(**kwargs):
+    """CompilerParams dropping fields this jax version doesn't know (e.g.
+    ``has_side_effects`` predates 0.5; older kernels still hint it for
+    newer runtimes)."""
+    return CompilerParams(
+        **{k: v for k, v in kwargs.items() if k in _PARAM_FIELDS})

@@ -1,0 +1,175 @@
+"""Host (numpy) execution engine for the fused wire kernels on CPU.
+
+The Pallas wire kernels in ``pack.py``/``wire_codecs.py`` compile natively
+on TPU and run under ``interpret=True`` for CPU parity tests, but the
+interpreter executes grid programs element-tile-at-a-time in Python — it
+proves semantics, not speed. On CPU hosts the dispatch layer
+(``ops.wire_*``) therefore runs the *same fused algorithms* here as flat
+numpy passes over zero-copy views of the jax buffers:
+
+  pack       one preallocated wire buffer + one ``copyto`` per slot from a
+             zero-copy view of the leaf (``np.asarray`` on a CPU jax array
+             aliases its memory) — no per-leaf intermediates, no
+             concatenate. This is the same slot-table gather the Pallas
+             kernel DMAs.
+  unpack     whole-leaf slots are returned as views into the decoded
+             buffer (zero copies); partial (stacked) slots copy the base
+             once and overwrite the stage rows.
+  int8       per-column absmax -> scale -> round/clip in one fused pass
+             per slot, bit-identical to ``transport.Int8Codec`` (same
+             IEEE fp32 ops; ``np.rint`` and XLA both round half-to-even).
+  cast       fp16/bf16 round-trip via numpy/ml_dtypes casts (both numpy
+             and XLA convert round-to-nearest-even).
+  topk       exact ``lax.top_k`` selection semantics via a partition-based
+             threshold: everything ``|x| > thresh`` plus the
+             lowest-indexed ``|x| == thresh`` ties up to k, with the
+             error-feedback residual produced by zeroing the selected
+             entries in place. Wire ``idx`` order differs from
+             ``lax.top_k`` (which sorts by magnitude) but the selected
+             *set* is identical, so decoded payloads and residuals match.
+
+Everything here returns numpy; jax consumers convert lazily on first use.
+
+Wire buffers come from a refcount-aware pool (``wire_buffer``): payload
+sized allocations exceed the allocator's mmap threshold, so a fresh
+``np.empty`` per round pays a page fault per 4 KiB written (~3x the copy
+cost). The pool hands back a previously used (warm) buffer only when its
+refcount proves nothing else still holds it — escaping references (mirror
+snapshots, zero-copy unpack views, stored residuals) automatically pin a
+buffer out of reuse.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+F32 = np.float32
+
+_POOL: dict = {}
+_POOL_DEPTH = 8
+
+
+def wire_buffer(n: int) -> np.ndarray:
+    """A (n,) fp32 buffer with warm pages, contents undefined. Reuses a
+    pooled buffer iff only the pool references it (refcount == 3 here:
+    pool list + loop variable + getrefcount argument)."""
+    bufs = _POOL.setdefault(n, [])
+    for b in bufs:
+        if sys.getrefcount(b) == 3:
+            return b
+    b = np.empty(n, F32)
+    bufs.append(b)
+    if len(bufs) > _POOL_DEPTH:
+        bufs.pop(0)
+    return b
+
+
+def leaf_view(a) -> np.ndarray:
+    """Raveled zero-copy host view of a (CPU) jax or numpy array."""
+    return np.asarray(a).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+def pack(srcs, layout, total: int) -> np.ndarray:
+    """``srcs``: raveled leaves; ``layout``: ((src_off, dst_off, size),...)
+    -> (total,) fp32 wire buffer."""
+    out = wire_buffer(total)
+    for src, (src_off, dst_off, size) in zip(srcs, layout):
+        np.copyto(out[dst_off:dst_off + size], src[src_off:src_off + size],
+                  casting="unsafe")
+    return out
+
+
+def unpack(flat, bases, layout):
+    """Reverse: ((src_off, dst_off, size, full), ...) rows; ``full`` slots
+    come back as zero-copy views of ``flat``, partial slots as a copy of
+    the base with the slot range overwritten. Returns raveled leaves."""
+    outs = []
+    for base, (src_off, dst_off, size, full) in zip(bases, layout):
+        seg = flat[dst_off:dst_off + size]
+        if full:
+            if seg.dtype != base.dtype:
+                seg = seg.astype(base.dtype)
+            outs.append(seg)
+        else:
+            if base.dtype == F32:
+                out = wire_buffer(base.shape[0])
+                np.copyto(out, base)
+            else:
+                out = np.array(base)
+            np.copyto(out[src_off:src_off + size], seg, casting="unsafe")
+            outs.append(out)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+def cast_encode(flat: np.ndarray, dtype) -> np.ndarray:
+    return flat.astype(dtype)
+
+
+def cast_decode(wire: np.ndarray) -> np.ndarray:
+    out = wire_buffer(wire.shape[0])
+    np.copyto(out, wire, casting="unsafe")
+    return out
+
+
+def int8_encode(flat, segs, nscales: int):
+    """``segs``: ((offset, size, channels, scale_offset), ...) — one row
+    per payload slot, matching ``transport._int8_channels``. Fused
+    absmax -> scale -> round/clip per slot."""
+    q = np.empty(flat.shape[0], np.int8)
+    scales = np.empty(nscales, F32)
+    for off, size, ch, soff in segs:
+        seg = flat[off:off + size].reshape(-1, ch)
+        amax = np.max(np.abs(seg), axis=0)
+        scale = np.maximum(amax, 1e-12) / F32(127.0)
+        scales[soff:soff + ch] = scale
+        np.copyto(q[off:off + size].reshape(-1, ch),
+                  np.clip(np.rint(seg / scale), -127, 127),
+                  casting="unsafe")
+    return q, scales
+
+
+def int8_decode(q, scales, segs, total: int) -> np.ndarray:
+    out = wire_buffer(total)
+    for off, size, ch, soff in segs:
+        seg = q[off:off + size].reshape(-1, ch).astype(F32)
+        seg *= scales[soff:soff + ch]
+        out[off:off + size] = seg.reshape(-1)
+    return out
+
+
+def topk_threshold(absc: np.ndarray, k: int):
+    """k-th largest magnitude and the number of ``== thresh`` ties kept."""
+    pivot = absc.shape[0] - k
+    thresh = np.partition(absc, pivot)[pivot]
+    n_gt = int(np.count_nonzero(absc > thresh))
+    return thresh, k - n_gt
+
+
+def topk_encode_ef(comp: np.ndarray, k: int):
+    """Select ``lax.top_k``'s exact entry set from the compensated delta
+    and apply the error-feedback update: returns (idx int32, val fp32,
+    new_residual) with the selected entries zeroed out of ``comp``'s copy.
+    """
+    absc = np.abs(comp)
+    thresh, needed = topk_threshold(absc, k)
+    idx = np.flatnonzero(absc > thresh)
+    if needed > 0:
+        idx = np.concatenate([idx, np.flatnonzero(absc == thresh)[:needed]])
+    new_res = wire_buffer(comp.shape[0])
+    np.copyto(new_res, comp)
+    new_res[idx] = 0.0
+    return idx.astype(np.int32), comp[idx], new_res
+
+
+def topk_decode(idx, val, total: int) -> np.ndarray:
+    out = wire_buffer(total)
+    out.fill(0.0)
+    out[idx] = val
+    return out

@@ -4,18 +4,35 @@ Each wrapper handles padding to TPU-aligned block shapes, dtype policy and
 the CPU fallback (interpret mode). On CPU (no TPU platform) the wrappers
 run the kernels with ``interpret=True`` so behaviour is identical
 everywhere; on TPU the compiled kernels run natively.
+
+The ``wire_*`` family (transport pack/unpack + fused codecs) adds a third
+backend: on CPU hosts the Pallas interpreter proves semantics but is far
+too slow to *be* the fast path, so by default the wrappers execute the
+same fused algorithms through the numpy engine in ``hostwire`` (zero-copy
+views + single-pass slot loops). Resolution order per call:
+
+  TPU platform            -> native Pallas kernels
+  ``interpret=True`` or   -> Pallas interpret mode (CI parity; also what
+  ``REPRO_WIRE_INTERPRET``   the kernels CI job exercises)
+  otherwise (CPU)         -> hostwire numpy fast path (returns numpy;
+                             jax consumers convert lazily)
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import flash_attention as fa
+from repro.kernels import hostwire as hw
 from repro.kernels import infonce as nce
 from repro.kernels import mamba2_scan as ms
+from repro.kernels import pack as pk
 from repro.kernels import rmsnorm as rn
+from repro.kernels import wire_codecs as wc
 
 
 def _on_tpu() -> bool:
@@ -96,3 +113,163 @@ def fused_rmsnorm(x, scale, eps: float = 1e-5, interpret: bool = None):
             break
     out = rn.rmsnorm_rows(x2, scale, eps, br=max(1, br), interpret=interpret)
     return out.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# wire kernels: transport pack/unpack + fused codecs (three-way dispatch)
+# ---------------------------------------------------------------------------
+def _wire_mode(interpret) -> str:
+    """'tpu' | 'interpret' | 'host' — see module docstring."""
+    if interpret:
+        return "interpret"
+    if _on_tpu():
+        return "tpu"
+    if interpret is None and \
+            os.environ.get("REPRO_WIRE_INTERPRET", "") not in ("", "0"):
+        return "interpret"
+    return "host"
+
+
+@functools.lru_cache(maxsize=None)
+def _pack_call(layout, total, interpret):
+    return jax.jit(lambda srcs: pk.gather_pack(
+        srcs, layout, total, interpret=interpret))
+
+
+def wire_pack(srcs, layout, total: int, *, interpret=None):
+    """Fused slot-table gather into the flat wire buffer. ``layout`` is
+    the static ``((src_off, dst_off, size), ...)`` table; ``srcs`` are the
+    matching leaves (any shape, raveled here). Returns (total,) fp32."""
+    mode = _wire_mode(interpret)
+    if mode == "host":
+        return hw.pack([hw.leaf_view(s) for s in srcs], layout, total)
+    if not layout:
+        return jnp.zeros((total,), jnp.float32)
+    srcs = [jnp.asarray(s).reshape(-1).astype(jnp.float32) for s in srcs]
+    return _pack_call(tuple(layout), total, mode == "interpret")(srcs)
+
+
+@functools.lru_cache(maxsize=None)
+def _unpack_call(layout, interpret):
+    def fn(flat, bases):
+        dtypes = [b.dtype for b in bases]
+        outs = pk.scatter_unpack(
+            flat, [b.astype(jnp.float32) for b in bases], layout,
+            interpret=interpret)
+        return [o.astype(dt) for o, dt in zip(outs, dtypes)]
+    return jax.jit(fn)
+
+
+def wire_unpack(flat, bases, layout, *, interpret=None):
+    """Fused slot-table scatter out of the flat wire buffer. ``layout``
+    rows are ``(src_off, dst_off, size, full)`` — ``full`` marks slots
+    covering their whole leaf (the host path returns those as zero-copy
+    views). Returns the updated leaves, raveled, in layout order."""
+    mode = _wire_mode(interpret)
+    if mode == "host":
+        return hw.unpack(np.asarray(flat), [hw.leaf_view(b) for b in bases],
+                         layout)
+    lay3 = tuple((s, d, n) for s, d, n, _ in layout)
+    bases = [jnp.asarray(b).reshape(-1) for b in bases]
+    return _unpack_call(lay3, mode == "interpret")(
+        jnp.asarray(flat, jnp.float32), bases)
+
+
+def wire_cast_encode(flat, dtype, *, interpret=None):
+    """fp16/bf16 cast-on-the-wire encode (single pass either backend)."""
+    if _wire_mode(interpret) == "host":
+        return hw.cast_encode(np.asarray(flat), np.dtype(dtype))
+    return jnp.asarray(flat).astype(dtype)
+
+
+def wire_cast_decode(wire, *, interpret=None):
+    if _wire_mode(interpret) == "host":
+        return hw.cast_decode(np.asarray(wire))
+    return jnp.asarray(wire).astype(jnp.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def _int8_enc_call(segs, interpret):
+    def fn(flat):
+        qs, scales = [], []
+        for off, size, ch, _ in segs:
+            x = jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(-1, ch)
+            q, s = wc.int8_quant_matrix(x, interpret=interpret)
+            qs.append(q.reshape(-1))
+            scales.append(s)
+        return jnp.concatenate(qs), jnp.concatenate(scales)
+    return jax.jit(fn)
+
+
+def wire_int8_encode(flat, segs, nscales: int, *, interpret=None):
+    """Fused per-slot int8 quantization over the flat payload. ``segs``
+    rows are ``(offset, size, channels, scale_offset)``. Returns
+    (q int8 of ``flat``'s length, scales fp32 (nscales,))."""
+    mode = _wire_mode(interpret)
+    if mode == "host":
+        return hw.int8_encode(np.asarray(flat), segs, nscales)
+    return _int8_enc_call(tuple(segs), mode == "interpret")(
+        jnp.asarray(flat, jnp.float32))
+
+
+@functools.lru_cache(maxsize=None)
+def _int8_dec_call(segs, total, interpret):
+    def fn(q, scales):
+        outs = []
+        for off, size, ch, soff in segs:
+            qi = jax.lax.dynamic_slice(q, (off,), (size,)).reshape(-1, ch)
+            s = jax.lax.dynamic_slice(scales, (soff,), (ch,))
+            outs.append(wc.int8_dequant_matrix(qi, s,
+                                               interpret=interpret).reshape(-1))
+        return jnp.concatenate(outs)
+    return jax.jit(fn)
+
+
+def wire_int8_decode(q, scales, segs, total: int, *, interpret=None):
+    mode = _wire_mode(interpret)
+    if mode == "host":
+        return hw.int8_decode(np.asarray(q), np.asarray(scales), segs, total)
+    return _int8_dec_call(tuple(segs), total, mode == "interpret")(
+        jnp.asarray(q), jnp.asarray(scales))
+
+
+@functools.lru_cache(maxsize=None)
+def _topk_call(k, interpret):
+    def fn(flat, ref, res):
+        comp, absc = wc.compensate(flat, ref, res, interpret=interpret)
+        vals, idx = jax.lax.top_k(absc, k)
+        thresh = vals[k - 1]
+        needed = (k - jnp.sum(absc > thresh)).astype(jnp.int32)
+        new_res = wc.topk_ef_update(comp, thresh[None], needed[None],
+                                    interpret=interpret)
+        return idx.astype(jnp.int32), comp[idx], new_res
+    return jax.jit(fn)
+
+
+def wire_topk_encode_ef(flat, ref, res, k: int, *, interpret=None):
+    """Fused top-k delta sparsification with on-chip error-feedback:
+    compensated delta ``flat - ref (+ res)``, exact ``lax.top_k``-set
+    selection, residual = the unselected (dropped) mass. ``res`` may be
+    None (the mirror/broadcast path, no EF carry). Returns
+    (idx int32 (k,), val fp32 (k,), new_residual fp32 (n,)) — wire ``idx``
+    order may differ between backends; the selected set is identical."""
+    mode = _wire_mode(interpret)
+    if mode == "host":
+        f = np.asarray(flat)
+        comp = hw.wire_buffer(f.shape[0])
+        np.subtract(f, np.asarray(ref), out=comp)
+        if res is not None:
+            comp += np.asarray(res)
+        return hw.topk_encode_ef(comp, k)
+    flat = jnp.asarray(flat, jnp.float32)
+    ref = jnp.asarray(ref, jnp.float32)
+    res = jnp.zeros_like(flat) if res is None else \
+        jnp.asarray(res, jnp.float32)
+    return _topk_call(k, mode == "interpret")(flat, ref, res)
+
+
+def wire_topk_decode(idx, val, total: int, *, interpret=None):
+    if _wire_mode(interpret) == "host":
+        return hw.topk_decode(np.asarray(idx), np.asarray(val), total)
+    return jnp.zeros((total,), jnp.float32).at[jnp.asarray(idx)].set(
+        jnp.asarray(val))

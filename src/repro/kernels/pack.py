@@ -1,0 +1,104 @@
+"""Pallas TPU fused wire pack/unpack: slot-table gather/scatter DMA.
+
+The transport's payload layout (``PayloadSpec``) is a static table of
+slots — for each travelling leaf, an element range ``[src_off, src_off +
+size)`` of the raveled leaf and a destination range ``[dst_off, dst_off +
+size)`` of the flat wire buffer. The XLA path materializes one sliced/cast
+intermediate per leaf and concatenates them (a fresh allocation + copy per
+leaf, and ``concatenate`` is pathologically slow on CPU); these kernels
+instead issue one async copy per slot inside a single grid program, moving
+every slot HBM->HBM directly into (or out of) the flat buffer with no
+intermediates.
+
+``gather_pack``   n raveled fp32 leaves -> (total,) flat wire buffer.
+``scatter_unpack`` flat wire buffer + n raveled base leaves -> n updated
+                  leaves; each output aliases its base in place
+                  (``input_output_aliases``) and only the slot range is
+                  DMA'd over it, so untouched elements (rows outside the
+                  stage range) keep the receiver's values.
+
+Both kernels keep operands in ``ANY`` memory space: nothing is staged
+through VMEM, the copies are pure DMA and the kernel body is just
+start-all / wait-all over the slot table. Oracles: ``ref.wire_pack_ref`` /
+``ref.wire_unpack_ref``; parity: tests/test_kernels.py (interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import make_compiler_params
+
+WIRE_DTYPE = jnp.float32
+
+
+def _pack_kernel(*refs, layout):
+    srcs, out, sem = refs[:-2], refs[-2], refs[-1]
+    copies = [
+        pltpu.make_async_copy(
+            srcs[i].at[pl.ds(src_off, size)],
+            out.at[pl.ds(dst_off, size)],
+            sem.at[i],
+        )
+        for i, (src_off, dst_off, size) in enumerate(layout)
+    ]
+    for c in copies:
+        c.start()
+    for c in copies:
+        c.wait()
+
+
+def gather_pack(srcs, layout, total: int, *, interpret: bool = False):
+    """``srcs``: 1D fp32 leaves, one per layout row; ``layout``: static
+    ``((src_off, dst_off, size), ...)``. Returns the (total,) wire buffer."""
+    assert len(srcs) == len(layout) and layout
+    kernel = functools.partial(_pack_kernel, layout=tuple(layout))
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY) for _ in srcs],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((total,), WIRE_DTYPE),
+        scratch_shapes=[pltpu.SemaphoreType.DMA((len(layout),))],
+        compiler_params=make_compiler_params(has_side_effects=True),
+        interpret=interpret,
+    )(*srcs)
+
+
+def _unpack_kernel(*refs, layout):
+    n = len(layout)
+    flat, outs, sem = refs[0], refs[1 + n:1 + 2 * n], refs[-1]
+    copies = [
+        pltpu.make_async_copy(
+            flat.at[pl.ds(dst_off, size)],
+            outs[i].at[pl.ds(src_off, size)],
+            sem.at[i],
+        )
+        for i, (src_off, dst_off, size) in enumerate(layout)
+    ]
+    for c in copies:
+        c.start()
+    for c in copies:
+        c.wait()
+
+
+def scatter_unpack(flat, bases, layout, *, interpret: bool = False):
+    """Reverse of ``gather_pack``: write each slot range of ``flat`` over
+    the matching range of its (aliased, donated) 1D base leaf. Returns the
+    updated leaves in layout order."""
+    assert len(bases) == len(layout) and layout
+    kernel = functools.partial(_unpack_kernel, layout=tuple(layout))
+    n = len(layout)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * (1 + n),
+        out_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * n,
+        out_shape=[jax.ShapeDtypeStruct(b.shape, b.dtype) for b in bases],
+        scratch_shapes=[pltpu.SemaphoreType.DMA((n,))],
+        input_output_aliases={i + 1: i for i in range(n)},
+        compiler_params=make_compiler_params(has_side_effects=True),
+        interpret=interpret,
+    )(flat, *bases)

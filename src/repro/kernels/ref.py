@@ -81,3 +81,50 @@ def rmsnorm_ref(x, scale, eps: float = 1e-5):
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps)
             * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- wire kernels (pack/unpack + fused codecs) ------------------------------
+def wire_pack_ref(srcs, layout, total: int):
+    """Slot-table gather: layout rows are (src_off, dst_off, size)."""
+    out = jnp.zeros((total,), jnp.float32)
+    for src, (src_off, dst_off, size) in zip(srcs, layout):
+        seg = jax.lax.dynamic_slice(src.astype(jnp.float32).reshape(-1),
+                                    (src_off,), (size,))
+        out = jax.lax.dynamic_update_slice(out, seg, (dst_off,))
+    return out
+
+
+def wire_unpack_ref(flat, bases, layout):
+    """Slot-table scatter: each slot range of ``flat`` overwrites the
+    matching range of its 1D base leaf."""
+    outs = []
+    for base, (src_off, dst_off, size) in zip(bases, layout):
+        seg = jax.lax.dynamic_slice(flat, (dst_off,), (size,))
+        outs.append(jax.lax.dynamic_update_slice(
+            base, seg.astype(base.dtype), (src_off,)))
+    return outs
+
+
+def int8_quant_ref(x):
+    """x: (R, C) fp32 -> (q int8, per-column scale fp32); the exact
+    ``transport.Int8Codec`` math."""
+    amax = jnp.max(jnp.abs(x), axis=0)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequant_ref(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def topk_ef_ref(flat, ref, res, k: int):
+    """Full XLA top-k upload semantics: compensated delta, ``lax.top_k``
+    selection, error-feedback residual, and the decoded dense payload.
+    Returns (idx, val, new_res, dec)."""
+    comp = flat - ref + res
+    _, idx = jax.lax.top_k(jnp.abs(comp), k)
+    val = comp[idx]
+    new_res = comp.at[idx].set(0.0)
+    dec = jnp.zeros_like(comp).at[idx].set(val)
+    return idx.astype(jnp.int32), val, new_res, dec

@@ -17,8 +17,10 @@ stacks them on a leading axis and executes each round — all clients' local
 steps plus FedAvg — as a single jit'd program (``repro.federated.engine``).
 
 Both modes route every download/upload through the wire transport
-(``--codec``: fp32 | fp16 | bf16 | int8 | topk[:frac]); see
-docs/transport.md for payload layout and codec semantics.
+(``--codec``: fp32 | fp16 | bf16 | int8 | topk[:frac]), on either wire
+engine (``--transport-kernels``: xla | pallas — the latter is the fused
+pack/codec kernel path, docs/kernels.md); see docs/transport.md for
+payload layout and codec semantics.
 
 Example:
   PYTHONPATH=src python -m repro.launch.train --mode vit \
@@ -75,7 +77,8 @@ def train_vit(args):
     state, hist = run_fedssl(
         cfg, ssl_cfg, fl, tc, images=images,
         client_indices=[jnp.asarray(i) for i in idx], aux_images=aux,
-        key=key, log=print, engine=args.engine, codec=args.codec, sim=sim)
+        key=key, log=print, engine=args.engine, codec=args.codec,
+        transport_kernels=args.transport_kernels, sim=sim)
     print(f"training done in {time.time() - t0:.1f}s; "
           f"total comm {hist.total_comm / 1e6:.2f} MB analytic, "
           f"{hist.total_wire / 1e6:.2f} MB on the wire "
@@ -145,7 +148,8 @@ def train_lm(args):
         return (b * tc.batch_size) % max(1, len(ix) - tc.batch_size)
 
     use_vmap = args.engine == "vmap"
-    wire = transport_mod.Transport(args.codec)
+    wire = transport_mod.Transport(args.codec,
+                                   kernels=args.transport_kernels)
     all_clients = list(range(fl.num_clients))
     if use_vmap:
         from repro.data.partition import stack_shards
@@ -265,6 +269,11 @@ def main():
                          "fp32 (identity), fp16, bf16, int8 (per-channel "
                          "quantization), topk[:frac] (sparsification with "
                          "error feedback, e.g. topk:0.05)")
+    ap.add_argument("--transport-kernels", default="xla",
+                    choices=transport_mod.TRANSPORT_KERNELS,
+                    help="wire-path engine: xla (jit'd slice/concat "
+                         "reference) or pallas (fused pack/codec kernels "
+                         "— docs/kernels.md)")
     ap.add_argument("--fleet", default="",
                     choices=("",) + fleet_mod.PROFILES,
                     help="simulate a heterogeneous device fleet drawn from "

@@ -1,6 +1,16 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracle."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracle.
+
+The ``wire_*`` tests parametrize over the dispatch modes available on CPU
+— ``None`` (platform default: the hostwire numpy engine, or Pallas
+interpret when ``REPRO_WIRE_INTERPRET`` is set, as in the CI kernels job)
+and ``True`` (Pallas interpret, always). Host mode is held to bit-exact
+parity with the eager XLA oracles; interpret mode gets a one-quantum
+int8 allowance because the Pallas interpreter lowers fp32 division as
+reciprocal-multiply (1 ulp off IEEE), which can flip a rounded value.
+"""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core.losses import info_nce
@@ -90,3 +100,138 @@ def test_fused_rmsnorm(shape, dtype, rng):
     err = jnp.max(jnp.abs(got.astype(jnp.float32)
                           - want.astype(jnp.float32)))
     assert err < _tol(dtype)
+
+
+# ---------------------------------------------------------------------------
+# wire kernels (transport fast path): host / interpret engines vs oracle
+# ---------------------------------------------------------------------------
+WIRE_MODES = (None, True)
+
+
+def _exact(interpret) -> bool:
+    """Host mode is bit-exact vs the eager oracles; interpret mode gets
+    the one-quantum int8 allowance (see module docstring)."""
+    return ops._wire_mode(interpret) == "host"
+
+
+def _wire_leaves(rng):
+    """Three leaves + a layout mixing full slots and a partial (stacked
+    stage range) slot, with deliberately unaligned sizes."""
+    k = jax.random.split(rng, 3)
+    leaves = [jax.random.normal(k[0], (4, 33)),        # stacked, partial
+              jax.random.normal(k[1], (129,)),
+              jax.random.normal(k[2], (7, 5))]
+    # rows: (src_off, dst_off, size); leaf 0 ships rows 1..3 only
+    layout = ((33, 0, 66), (0, 66, 129), (0, 195, 35))
+    total = 230
+    return leaves, layout, total
+
+
+@pytest.mark.parametrize("interpret", WIRE_MODES)
+def test_wire_pack_matches_ref(interpret, rng):
+    leaves, layout, total = _wire_leaves(rng)
+    got = np.asarray(ops.wire_pack(leaves, layout, total,
+                                   interpret=interpret))
+    want = np.asarray(ref.wire_pack_ref(
+        [l.reshape(-1) for l in leaves], layout, total))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("interpret", WIRE_MODES)
+def test_wire_unpack_matches_ref_and_roundtrips(interpret, rng):
+    leaves, layout, total = _wire_leaves(rng)
+    flat = jax.random.normal(jax.random.split(rng)[0], (total,))
+    bases = [l.reshape(-1) for l in leaves]
+    lay4 = tuple((s, d, n, n == b.shape[0])
+                 for (s, d, n), b in zip(layout, bases))
+    got = ops.wire_unpack(flat, bases, lay4, interpret=interpret)
+    want = ref.wire_unpack_ref(jnp.asarray(flat), bases, layout)
+    for g, w in zip(got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w))
+    # pack(unpack(flat)) restores the wire buffer exactly
+    repacked = ops.wire_pack(got, layout, total, interpret=interpret)
+    assert np.array_equal(np.asarray(repacked), np.asarray(flat))
+
+
+@pytest.mark.parametrize("interpret", WIRE_MODES)
+def test_wire_cast_roundtrip(interpret, rng):
+    flat = jax.random.normal(rng, (517,))
+    for dtype in (jnp.float16, jnp.bfloat16):
+        wire = ops.wire_cast_encode(flat, dtype, interpret=interpret)
+        want = np.asarray(flat.astype(dtype))
+        assert np.array_equal(np.asarray(wire), want)
+        dec = ops.wire_cast_decode(wire, interpret=interpret)
+        assert np.array_equal(np.asarray(dec),
+                              np.asarray(want.astype(np.float32)))
+
+
+@pytest.mark.parametrize("interpret", WIRE_MODES)
+def test_wire_int8_matches_codec_math(interpret, rng):
+    # two payload slots: a (64, 8) matrix (per-column scales) and a
+    # 40-vector (single per-tensor scale)
+    k1, k2 = jax.random.split(rng)
+    a = jax.random.normal(k1, (64, 8)) * 3.0
+    b = jax.random.normal(k2, (40,))
+    flat = jnp.concatenate([a.reshape(-1), b])
+    segs = ((0, 512, 8, 0), (512, 40, 1, 8))
+    q, scales = ops.wire_int8_encode(flat, segs, 9, interpret=interpret)
+    qa, sa = ref.int8_quant_ref(a)
+    qb, sb = ref.int8_quant_ref(b.reshape(-1, 1))
+    want_q = np.concatenate([np.asarray(qa).reshape(-1),
+                             np.asarray(qb).reshape(-1)])
+    want_s = np.concatenate([np.asarray(sa), np.asarray(sb)])
+    if _exact(interpret):
+        assert np.array_equal(np.asarray(q), want_q)
+        assert np.array_equal(np.asarray(scales), want_s)
+    else:
+        assert np.abs(np.asarray(q).astype(np.int32)
+                      - want_q.astype(np.int32)).max() <= 1
+        np.testing.assert_allclose(np.asarray(scales), want_s, rtol=1e-6)
+    dec = ops.wire_int8_decode(q, scales, segs, 552, interpret=interpret)
+    want_dec = np.concatenate([
+        np.asarray(ref.int8_dequant_ref(qa, sa)).reshape(-1),
+        np.asarray(ref.int8_dequant_ref(qb, sb)).reshape(-1)])
+    atol = 0.0 if _exact(interpret) else float(want_s.max()) * 1.01
+    np.testing.assert_allclose(np.asarray(dec), want_dec, atol=atol)
+
+
+@pytest.mark.parametrize("interpret", WIRE_MODES)
+@pytest.mark.parametrize("with_res", [False, True])
+def test_wire_topk_ef_matches_ref(interpret, with_res, rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    n, k = 700, 70
+    flat = jax.random.normal(k1, (n,))
+    base = jax.random.normal(k2, (n,))
+    res = jax.random.normal(k3, (n,)) * 0.1 if with_res else None
+    idx, val, new_res = ops.wire_topk_encode_ef(flat, base, res, k,
+                                                interpret=interpret)
+    ridx, rval, rres, rdec = ref.topk_ef_ref(
+        flat, base, jnp.zeros_like(flat) if res is None else res, k)
+    # idx order is backend-specific (magnitude-sorted vs position-sorted):
+    # the selected set, decoded payload and residual must match exactly
+    assert sorted(np.asarray(idx).tolist()) == \
+        sorted(np.asarray(ridx).tolist())
+    dec = ops.wire_topk_decode(idx, val, n, interpret=interpret)
+    assert np.array_equal(np.asarray(dec), np.asarray(rdec))
+    assert np.array_equal(np.asarray(new_res), np.asarray(rres))
+
+
+@pytest.mark.parametrize("interpret", WIRE_MODES)
+def test_wire_topk_breaks_ties_like_top_k(interpret):
+    # exact duplicated magnitudes straddling the threshold: selection must
+    # keep lax.top_k's lowest-index-first tie order
+    flat = jnp.asarray(
+        np.tile(np.asarray([5.0, -3.0, 3.0, 1.0, 3.0, -5.0], np.float32),
+                40))
+    base = jnp.zeros_like(flat)
+    k = 100          # 80 entries of |x|=5, threshold ties at |x|=3
+    idx, val, new_res = ops.wire_topk_encode_ef(flat, base, None, k,
+                                                interpret=interpret)
+    ridx, rval, rres, rdec = ref.topk_ef_ref(flat, base,
+                                             jnp.zeros_like(flat), k)
+    assert sorted(np.asarray(idx).tolist()) == \
+        sorted(np.asarray(ridx).tolist())
+    dec = ops.wire_topk_decode(idx, val, flat.shape[0],
+                               interpret=interpret)
+    assert np.array_equal(np.asarray(dec), np.asarray(rdec))
+    assert np.array_equal(np.asarray(new_res), np.asarray(rres))

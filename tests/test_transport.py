@@ -283,6 +283,76 @@ def test_residual_store_resets_on_spec_change():
 
 
 # ---------------------------------------------------------------------------
+# pallas wire engine vs the XLA reference
+# ---------------------------------------------------------------------------
+def _engine_tol(codec: str) -> float:
+    """fp32/fp16/bf16 ride the fused pack path and exact casts — bit
+    parity. int8/topk involve a division whose fusion differs between
+    eager and jit'd XLA by 1 ulp, so the decoded trees get float
+    tolerance."""
+    return 0.0 if codec in ("fp32", "fp16", "bf16") else 1e-6
+
+
+def _assert_trees_match(a, b, atol, what):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), what
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if atol == 0.0:
+            np.testing.assert_array_equal(x, y, err_msg=what)
+        else:
+            d = np.abs(x.astype(np.float64) - y.astype(np.float64)).max()
+            assert d <= atol, (what, float(d))
+
+
+def test_transport_rejects_unknown_kernels():
+    with pytest.raises(ValueError):
+        Transport("fp32", kernels="cuda")
+
+
+@pytest.mark.parametrize("codec", ["fp32", "fp16", "int8", "topk:0.2"])
+@given(fam=st.sampled_from(FAMILIES))
+@settings(max_examples=3, deadline=None)
+def test_pallas_engine_matches_xla(codec, fam):
+    """Both wire engines produce the same broadcasts, aggregated uploads
+    and error-feedback residuals, for every schedule's mid-round payload
+    on every model family."""
+    params, stages = family_tree(fam, seed=3)
+    pert = jax.tree.map(
+        lambda a: a + 0.02 * jax.random.normal(
+            jax.random.PRNGKey(7), a.shape, a.dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
+    atol = _engine_tol(codec)
+    w = aggregate.client_weights([1, 2])
+    for schedule in sched.SCHEDULES:
+        plans = sched.build_schedule(FLConfig(rounds=4, schedule=schedule),
+                                     stages)
+        plan = plans[len(plans) // 2]
+        tx = Transport(codec, kernels="xla")
+        tp = Transport(codec, kernels="pallas")
+        # two broadcasts: delta codecs do dense sync then a sparse delta
+        for r, src in enumerate((params, pert)):
+            vx, sx = tx.broadcast(src, plan)
+            vp, sp = tp.broadcast(src, plan)
+            assert sx == sp, (schedule, codec)
+            _assert_trees_match(vx, vp, atol,
+                                f"bcast {fam}/{schedule}/{codec} r{r}")
+        # two aggregation rounds so error feedback carries residuals
+        for r in range(2):
+            ax, _ = tx.aggregate_uploads(params, [pert, params],
+                                         ["a", "b"], plan, w)
+            ap, _ = tp.aggregate_uploads(params, [pert, params],
+                                         ["a", "b"], plan, w)
+            _assert_trees_match(ax, ap, atol,
+                                f"agg {fam}/{schedule}/{codec} r{r}")
+        if tx.codec.error_feedback:
+            spec = tx.plan_specs(params, plan)["upload"]
+            _assert_trees_match(tx.gather_residuals(["a", "b"], spec),
+                                tp.gather_residuals(["a", "b"], spec),
+                                1e-7, f"resid {fam}/{schedule}/{codec}")
+
+
+# ---------------------------------------------------------------------------
 # fp32 driver bit-parity against the legacy (pytree hand-off) FL loop
 # ---------------------------------------------------------------------------
 @pytest.mark.slow
