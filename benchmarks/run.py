@@ -32,8 +32,14 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 import numpy as np                                        # noqa: E402
 
 from benchmarks import resources                          # noqa: E402
+from repro.obs import NOOP_OBS                            # noqa: E402
 
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+# ``--trace`` swaps this for an enabled bundle; benches that run real FL
+# rounds pass it into run_fedssl so the bench trace shows the full span
+# tree (docs/observability.md).
+OBS = NOOP_OBS
 
 SCHEDULES = ("e2e", "layerwise", "lw_fedssl", "progressive", "fll_dd")
 NAMES = {"e2e": "FedMoCo", "layerwise": "FedMoCo-LW",
@@ -240,7 +246,8 @@ def bench_engine(rounds=8, clients=8):
         times = [time.perf_counter()]
         _, hist = run_fedssl(cfg, sslc, fl, tc, images=imgs,
                              client_indices=idx, key=key, engine=engine,
-                             log=lambda m: times.append(time.perf_counter()))
+                             log=lambda m: times.append(time.perf_counter()),
+                             obs=OBS)
         total = times[-1] - times[0]
         rps[engine] = (rounds - 1) / (times[-1] - times[1])
         print(f"{engine:12s} {total:6.1f}s total (incl. compile)  "
@@ -434,11 +441,15 @@ def bench_simulation(rounds=6, clients=6, clients_per_round=4,
                     policy, num_clients=clients, seed=seed)
                 _, hist = run_fedssl(cfg, sslc, fl, tc, images=imgs,
                                      client_indices=idx,
-                                     key=jax.random.PRNGKey(seed), sim=sim)
+                                     key=jax.random.PRNGKey(seed), sim=sim,
+                                     obs=OBS)
                 if target is None:     # first policy sets the group bar
                     target = min(hist.loss)
                 ttt = hist.wall_clock_to_loss(target)
                 rows.append({
+                    # the full versioned round series rides along so the
+                    # bench json round-trips through FLHistory.from_dict
+                    "history": hist.to_dict(),
                     "schedule": schedule, "fleet": prof, "policy": policy,
                     "rounds": rounds, "clients": clients,
                     "clients_per_round": clients_per_round,
@@ -526,10 +537,18 @@ FULL_BENCHES = {"table4": bench_table4}
 
 
 def main():
+    global OBS
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--trace", action="store_true",
+                    help="span-trace the bench run (one span per bench, "
+                         "full FL span trees inside) and write "
+                         "results/bench_trace.jsonl + .chrome.json")
     args = ap.parse_args()
+    if args.trace:
+        from repro.obs import make_obs
+        OBS = make_obs(trace=True, source="benchmarks.run")
     todo = dict(BENCHES)
     if args.full:
         todo.update(FULL_BENCHES)
@@ -537,8 +556,17 @@ def main():
         todo = {args.only: {**BENCHES, **FULL_BENCHES}[args.only]}
     t0 = time.perf_counter()
     for name, fn in todo.items():
-        fn()
+        with OBS.tracer.span(f"bench.{name}", cat="bench"):
+            fn()
     print(f"\nall benchmarks done in {time.perf_counter() - t0:.1f}s")
+    if args.trace:
+        RESULTS.mkdir(exist_ok=True)
+        written = OBS.export(
+            trace_jsonl=RESULTS / "bench_trace.jsonl",
+            chrome_trace=RESULTS / "bench_trace.chrome.json",
+            benches=sorted(todo))
+        for kind, path in sorted(written.items()):
+            print(f"obs: wrote {kind} -> {path}")
 
 
 if __name__ == "__main__":

@@ -8,10 +8,14 @@ definition here. The validators return a list of human-readable problems
 (empty = valid) instead of raising, so callers can report every issue at
 once.
 
-Two documents are covered: the fleet-simulation bench
-(``validate_simulation_bench``) and the wire-transport bench
+Four document families are covered: the fleet-simulation bench
+(``validate_simulation_bench``), the wire-transport bench
 (``validate_transport_bench`` — per-schedule pack/unpack throughput for
-both wire engines plus one codec-throughput row per codec).
+both wire engines plus one codec-throughput row per codec), and the two
+observability exports from ``repro.obs`` — the JSONL span stream
+(``validate_trace_jsonl``) and the Chrome ``trace_event`` document
+(``validate_chrome_trace``) that Perfetto / chrome://tracing loads —
+plus the flattened metrics CSV (``validate_metrics_csv``).
 """
 from __future__ import annotations
 
@@ -37,6 +41,13 @@ SIMULATION_ROW_SCHEMA: Dict[str, Any] = {
 
 SIMULATION_TOP_KEYS = ("bench", "config", "rows")
 
+# optional per-row extras: newer bench runs embed the versioned
+# ``FLHistory.to_dict()`` round-trip form; older checked-in artifacts
+# predate it.
+SIMULATION_ROW_OPTIONAL: Dict[str, Any] = {
+    "history": dict,
+}
+
 
 def _check_row(i: int, row: Any, errors: List[str]):
     if not isinstance(row, dict):
@@ -55,8 +66,14 @@ def _check_row(i: int, row: Any, errors: List[str]):
             errors.append(f"rows[{i}].{field}: expected "
                           f"{'/'.join(t.__name__ for t in tt)}, "
                           f"got {type(v).__name__} ({v!r})")
+    for field, types in SIMULATION_ROW_OPTIONAL.items():
+        if field in row and not isinstance(row[field], types):
+            errors.append(f"rows[{i}].{field}: expected "
+                          f"{types.__name__}, "
+                          f"got {type(row[field]).__name__}")
     for field in row:
-        if field not in SIMULATION_ROW_SCHEMA:
+        if field not in SIMULATION_ROW_SCHEMA \
+                and field not in SIMULATION_ROW_OPTIONAL:
             errors.append(f"rows[{i}]: unknown field '{field}' "
                           f"(update benchmarks/schemas.py)")
 
@@ -183,4 +200,162 @@ def validate_transport_bench(doc: Any) -> List[str]:
             for f in ("encode_gbps", "decode_gbps"):
                 _check_engine_map(f"codec_rows[{i}].{f}", row.get(f),
                                   errors)
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# observability artifacts (repro.obs exporters)
+# ---------------------------------------------------------------------------
+# Single definitions live with the writers; re-exported here so the
+# validators and the exporters cannot drift apart.
+from repro.obs.export import (METRICS_CSV_HEADER, TRACE_KIND,  # noqa: E402
+                              TRACE_VERSION)
+
+_NUM = (int, float)
+
+# span-stream event as written by Tracer: "X" complete spans and "i"
+# instants share one uniform shape (instants have dur 0); every event
+# carries the structural fields the trace CLI and the determinism tests
+# key on.
+TRACE_EVENT_SCHEMA: Dict[str, Any] = {
+    "ph": str,
+    "name": str,
+    "cat": str,
+    "ts": _NUM,
+    "dur": _NUM,
+    "pid": int,
+    "tid": int,
+    "seq": int,
+    "parent": (int, type(None)),
+    "depth": int,
+    "args": dict,
+}
+
+
+def _check_event(where: str, e: Any, errors: List[str]):
+    _check_fields(where, e, TRACE_EVENT_SCHEMA, errors)
+    if not isinstance(e, dict):
+        return
+    if e.get("ph") not in ("X", "i"):
+        errors.append(f"{where}.ph: expected 'X' or 'i', "
+                      f"got {e.get('ph')!r}")
+    if e.get("ph") == "X" and isinstance(e.get("dur"), _NUM) \
+            and not isinstance(e.get("dur"), bool) and e["dur"] < 0:
+        errors.append(f"{where}.dur: negative ({e['dur']!r})")
+
+
+def validate_trace_jsonl(header: Any, events: Any) -> List[str]:
+    """Validate a ``(header, events)`` pair as returned by
+    ``repro.obs.read_jsonl``; returns a list of problems."""
+    errors: List[str] = []
+    if not isinstance(header, dict):
+        return [f"header: expected object, got {type(header).__name__}"]
+    if header.get("kind") != TRACE_KIND:
+        errors.append(f"header.kind: expected {TRACE_KIND!r}, "
+                      f"got {header.get('kind')!r}")
+    if header.get("version") != TRACE_VERSION:
+        errors.append(f"header.version: expected {TRACE_VERSION}, "
+                      f"got {header.get('version')!r}")
+    if not isinstance(header.get("tracks"), dict):
+        errors.append("header.tracks: expected object")
+    if not isinstance(events, list) or not events:
+        errors.append("events: expected a non-empty list")
+        return errors
+    for i, e in enumerate(events):
+        _check_event(f"events[{i}]", e, errors)
+    return errors
+
+
+CHROME_TOP_KEYS = ("traceEvents", "displayTimeUnit")
+CHROME_INSTANT_SCOPES = ("t", "p", "g")
+
+
+def validate_chrome_trace(doc: Any) -> List[str]:
+    """Validate a Chrome ``trace_event`` JSON document (the format
+    Perfetto / chrome://tracing loads): ``{"traceEvents": [...]}`` with
+    complete ("X", ts+dur in µs), instant ("i", explicit scope) and
+    metadata ("M", thread_name) events. Returns a list of problems."""
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"top level: expected object, got {type(doc).__name__}"]
+    for k in CHROME_TOP_KEYS:
+        if k not in doc:
+            errors.append(f"top level: missing key '{k}'")
+    events = doc.get("traceEvents", [])
+    if not isinstance(events, list) or not events:
+        errors.append("traceEvents: expected a non-empty list")
+        return errors
+    for i, e in enumerate(events):
+        w = f"traceEvents[{i}]"
+        if not isinstance(e, dict):
+            errors.append(f"{w}: expected object, got {type(e).__name__}")
+            continue
+        ph = e.get("ph")
+        for field, types in (("name", str), ("pid", int), ("tid", int),
+                             ("args", dict)):
+            v = e.get(field)
+            if not isinstance(v, types) or isinstance(v, bool):
+                errors.append(f"{w}.{field}: expected "
+                              f"{types.__name__}, got {type(v).__name__}")
+        if ph == "M":
+            if e.get("name") != "thread_name" or \
+                    not isinstance(e.get("args", {}).get("name"), str):
+                errors.append(f"{w}: metadata event must be thread_name "
+                              f"with args.name")
+            continue
+        if ph not in ("X", "i"):
+            errors.append(f"{w}.ph: expected 'X'/'i'/'M', got {ph!r}")
+            continue
+        if not isinstance(e.get("ts"), _NUM) or isinstance(e["ts"], bool):
+            errors.append(f"{w}.ts: expected number")
+        if not isinstance(e.get("cat"), str):
+            errors.append(f"{w}.cat: expected str")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, _NUM) or isinstance(dur, bool) \
+                    or dur < 0:
+                errors.append(f"{w}.dur: expected non-negative number, "
+                              f"got {dur!r}")
+        if ph == "i" and e.get("s") not in CHROME_INSTANT_SCOPES:
+            errors.append(f"{w}.s: instant needs scope in "
+                          f"{CHROME_INSTANT_SCOPES}, got {e.get('s')!r}")
+    return errors
+
+
+METRIC_TYPES = ("counter", "gauge", "histogram")
+HISTOGRAM_FIELDS = ("count", "sum", "min", "max", "mean")
+
+
+def validate_metrics_csv(text: Any) -> List[str]:
+    """Validate the flattened ``metric,type,field,value`` CSV that
+    ``repro.obs.export.write_metrics_csv`` emits."""
+    errors: List[str] = []
+    if not isinstance(text, str):
+        return [f"top level: expected str, got {type(text).__name__}"]
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    if not lines or lines[0] != METRICS_CSV_HEADER:
+        errors.append(f"line 1: expected header {METRICS_CSV_HEADER!r}, "
+                      f"got {(lines[0] if lines else '')!r}")
+        return errors
+    if len(lines) == 1:
+        errors.append("no metric rows")
+    for i, ln in enumerate(lines[1:], start=2):
+        parts = ln.split(",")
+        if len(parts) != 4:
+            errors.append(f"line {i}: expected 4 fields, got {len(parts)}")
+            continue
+        name, mtype, field, value = parts
+        if not name:
+            errors.append(f"line {i}: empty metric name")
+        if mtype not in METRIC_TYPES:
+            errors.append(f"line {i}: unknown metric type {mtype!r}")
+        elif mtype in ("counter", "gauge") and field != "value":
+            errors.append(f"line {i}: {mtype} field must be 'value', "
+                          f"got {field!r}")
+        elif mtype == "histogram" and field not in HISTOGRAM_FIELDS:
+            errors.append(f"line {i}: unknown histogram field {field!r}")
+        try:
+            float(value)
+        except ValueError:
+            errors.append(f"line {i}: value {value!r} is not numeric")
     return errors

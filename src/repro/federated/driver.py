@@ -20,9 +20,22 @@ propagates realistically. ``FLHistory`` records both the analytic byte
 counts (``comm.round_comm_bytes``) and the measured wire bytes; with the
 fp32 identity codec the two are equal and training is bit-identical to
 handing pytrees around directly.
+
+Observability (``repro.obs``, off by default): pass ``obs=make_obs(...)``
+and every round becomes a span tree — ``run > round > {download,
+local_train, calibrate}`` with engine/transport child spans — annotated
+with the analytic and wire byte counts, loss, LR and participation, while
+the metrics registry accumulates wire-byte counters, round-time
+histograms and a jit-recompile counter read off the engine/transport
+compile caches. The trace CLI (``python -m repro.launch.trace``)
+regenerates the paper's comm tables from those spans alone. With the
+default ``NOOP_OBS`` every hook is a no-op and training output is
+bit-identical to the uninstrumented driver.
 """
 from __future__ import annotations
 
+import dataclasses
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List
 
@@ -34,8 +47,11 @@ from repro.core import ssl as ssl_mod
 from repro.federated import comm, server
 from repro.federated import engine as engine_mod
 from repro.federated import transport as transport_mod
+from repro.obs import NOOP_OBS, format_round_line
 from repro.optim import make_optimizer
 from repro.optim.schedules import learning_rate, scaled_base_lr
+
+HISTORY_VERSION = 1
 
 
 @dataclass
@@ -68,8 +84,11 @@ class FLHistory:
     @property
     def compression_ratio(self) -> float:
         """Measured compression: analytic (uncompressed) bytes over wire
-        bytes. 1.0 for the identity codec."""
-        return self.total_comm / max(1, self.total_wire)
+        bytes. 1.0 for the identity codec; NaN when nothing has been on
+        the wire yet (an empty history has no ratio, not a huge one)."""
+        if self.total_wire == 0:
+            return float("nan")
+        return self.total_comm / self.total_wire
 
     @property
     def total_wall_clock(self) -> float:
@@ -97,12 +116,37 @@ class FLHistory:
                 return t
         return None
 
+    # -- JSON round-trip: the one serialization traces, benches and
+    # -- checkpoints share (versioned, keyed by field name) ------------------
+    def to_dict(self) -> Dict[str, Any]:
+        fields: Dict[str, list] = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            fields[f.name] = ([list(t) for t in v]
+                              if f.name == "participants" else list(v))
+        return {"version": HISTORY_VERSION, "fields": fields}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "FLHistory":
+        if d.get("version") != HISTORY_VERSION:
+            raise ValueError(f"unsupported FLHistory version "
+                             f"{d.get('version')!r} "
+                             f"(have {HISTORY_VERSION})")
+        known = {f.name for f in dataclasses.fields(cls)}
+        kw = {}
+        for name, vals in d.get("fields", {}).items():
+            if name not in known:
+                raise ValueError(f"unknown FLHistory field '{name}'")
+            kw[name] = ([tuple(v) for v in vals]
+                        if name == "participants" else list(vals))
+        return cls(**kw)
+
 
 def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                aux_images=None, key=None, encoder=None, image_size: int = 32,
                log=None, engine: str = "sequential",
                codec: str = "fp32", transport_kernels: str = "xla",
-               sim=None) -> tuple:
+               sim=None, obs=None) -> tuple:
     """Run the FL process; returns (final_state, FLHistory).
 
     images: (n, H, W, 3) pooled training pool; client_indices: list of index
@@ -116,8 +160,12 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
     ``sim=None`` — or the synchronous policy over a uniform fleet — the
     training numerics are bit-identical to the pre-simulator driver; other
     policies change who trains and how updates aggregate, and ``FLHistory``
-    gains per-round wall-clock / device-seconds / energy / drop counts.
+    gains per-round wall-clock / device-seconds / energy / drop counts;
+    obs: optional ``repro.obs.Observability`` (spans, metrics, profiler).
+    Defaults to the no-op bundle — tracing never changes training numerics.
     """
+    obs = obs if obs is not None else NOOP_OBS
+    tracer, met = obs.tracer, obs.metrics
     key = key if key is not None else jax.random.PRNGKey(fl.seed)
     if encoder is None:
         encoder = ssl_mod.make_vit_encoder(model_cfg, image_size)
@@ -129,12 +177,13 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
     hist = FLHistory()
 
     wire = transport_mod.Transport(codec, include_heads=fl.include_heads,
-                                   kernels=transport_kernels)
+                                   kernels=transport_kernels, obs=obs)
     eng = engine_mod.make_engine(
         engine, encoder=encoder, ssl_cfg=ssl_cfg, opt=opt, fl=fl,
         train_cfg=train_cfg, images=images, client_indices=client_indices,
-        transport=wire)
+        transport=wire, obs=obs)
     if sim is not None:
+        sim.obs = obs
         # ViT patch grid prices the per-step FLOPs (4x4 patches)
         sim.prepare(model_cfg, num_stages=encoder.num_stages,
                     counts=[len(ix) for ix in client_indices],
@@ -157,95 +206,157 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
     stage_lengths = {s: sum(1 for p in plans if p.stage == s)
                      for s in set(p.stage for p in plans)}
 
-    for plan in plans:
-        if plan.new_stage:
-            if sim is not None:
-                sim.begin_stage()
-            state = server.begin_stage(
-                state, plan.stage, weight_transfer=fl.weight_transfer)
-        lr = float(learning_rate(
-            plan.round_idx, fl.rounds, base_lr, train_cfg.lr_schedule,
-            stage_step=plan.round_idx - stage_start[plan.stage],
-            stage_total=stage_lengths[plan.stage],
-            warmup_steps=train_cfg.warmup_steps))
-        key, ks = jax.random.split(key)
-        # with the default overcommit (1.0) this is byte-for-byte the
-        # historical sampling call — same key, same cohort
-        cohort = server.sample_clients(
-            ks, fl.num_clients, fl.clients_per_round,
-            overcommit=sim.overcommit if sim is not None else 1.0)
-        # download direction: clients (and the alignment loss's global
-        # model) see the wire-decoded broadcast, not the server pytree
-        dstate, down = server.broadcast_download(state, plan, wire)
-        global_enc = (jax.tree.map(jnp.copy, dstate["online"]["enc"])
-                      if plan.align else None)
-        outcome = None
-        if sim is not None:
-            up_spec = wire.plan_specs(state["online"], plan)["upload"]
-            outcome = sim.begin_round(
-                plan, cohort, down_bytes=down["wire_bytes"],
-                up_bytes=wire.upload_stats(up_spec)["wire_bytes"])
-            participants = list(outcome.train_ids)
-        else:
-            participants = cohort
-        # per-participant keys are split here, identically for both
-        # engines, so the main RNG chain (and the calibration key below)
-        # is engine-independent
-        client_keys = []
-        for _ in participants:
-            key, kc = jax.random.split(key)
-            client_keys.append(kc)
-        if sim is not None and sim.policy.needs_client_trees:
-            # buffered-async: the engine returns per-client decoded
-            # trees; the policy buffers them and aggregates arrivals
-            # staleness-weighted (possibly rounds after they trained)
-            if participants:
-                trees, losses, up = eng.run_round(
-                    dstate, plan, participants, client_keys, lr,
-                    global_enc, server_online=state["online"],
-                    collect=True)
-            else:   # every sampled candidate was busy or offline
-                trees, losses = [], []
-                up = wire.upload_stats(up_spec)
-            new_online, outcome = sim.complete_round_async(outcome, trees)
-        else:
-            new_online, losses, up = eng.run_round(
-                dstate, plan, participants, client_keys, lr, global_enc,
-                server_online=state["online"])
-            if sim is not None:
-                outcome = sim.complete_round(outcome)
-        state = {**state, "online": new_online}
-        if plan.server_calibrate and aux_images is not None:
-            key, kg = jax.random.split(key)
-            state = server.server_calibrate(
-                state, aux_images, get_calib(plan.sub_layers), opt,
-                epochs=fl.server_epochs, batch_size=train_cfg.batch_size,
-                key=kg, lr=lr)
-        cb = comm.round_comm_bytes(state["online"], plan,
-                                   include_heads=fl.include_heads)
-        if losses:
-            hist.loss.append(sum(losses) / len(losses))
-        else:   # async round with no launches: carry the last mean forward
-            hist.loss.append(hist.loss[-1] if hist.loss else float("nan"))
-        hist.round_stage.append(plan.stage)
-        hist.download_bytes.append(cb["download"])
-        hist.upload_bytes.append(cb["upload"])
-        hist.wire_download_bytes.append(down["wire_bytes"])
-        hist.wire_upload_bytes.append(up["wire_bytes"])
-        sim_log = ""
-        if outcome is not None:
-            hist.round_wall_clock.append(outcome.wall_clock_s)
-            hist.device_seconds.append(outcome.device_seconds)
-            hist.energy_joules.append(outcome.energy_j)
-            hist.dropped_clients.append(len(outcome.dropped))
-            hist.participants.append(tuple(participants))
-            sim_log = (f" sim {outcome.wall_clock_s:.1f}s "
-                       f"dropped {len(outcome.dropped)}")
-        if log:
-            log(f"round {plan.round_idx + 1}/{fl.rounds} stage {plan.stage} "
-                f"loss {hist.loss[-1]:.4f} lr {lr:.2e} "
-                f"down {cb['download'] / 1e6:.2f}MB "
-                f"up {cb['upload'] / 1e6:.2f}MB "
-                f"wire {(down['wire_bytes'] + up['wire_bytes']) / 1e6:.2f}MB"
-                + sim_log)
+    obs.start_profiler()
+    jit_entries = 0
+    run_span = tracer.span(
+        "run", cat="fl", mode="fedssl", schedule=fl.schedule, engine=engine,
+        codec=wire.codec.name, kernels=transport_kernels, rounds=fl.rounds,
+        clients=fl.num_clients, sim=sim.policy.name if sim else None)
+    with run_span:
+        for plan in plans:
+            host_t0 = time.perf_counter()
+            round_span = tracer.span("round", cat="fl",
+                                     round=plan.round_idx, stage=plan.stage)
+            with round_span:
+                if plan.new_stage:
+                    tracer.instant("stage_transition", cat="fl",
+                                   stage=plan.stage)
+                    if sim is not None:
+                        sim.begin_stage()
+                    state = server.begin_stage(
+                        state, plan.stage,
+                        weight_transfer=fl.weight_transfer)
+                lr = float(learning_rate(
+                    plan.round_idx, fl.rounds, base_lr,
+                    train_cfg.lr_schedule,
+                    stage_step=plan.round_idx - stage_start[plan.stage],
+                    stage_total=stage_lengths[plan.stage],
+                    warmup_steps=train_cfg.warmup_steps))
+                key, ks = jax.random.split(key)
+                # with the default overcommit (1.0) this is byte-for-byte
+                # the historical sampling call — same key, same cohort
+                cohort = server.sample_clients(
+                    ks, fl.num_clients, fl.clients_per_round,
+                    overcommit=sim.overcommit if sim is not None else 1.0)
+                # download direction: clients (and the alignment loss's
+                # global model) see the wire-decoded broadcast, not the
+                # server pytree
+                with tracer.span("download", cat="fl"):
+                    dstate, down = server.broadcast_download(state, plan,
+                                                             wire)
+                global_enc = (jax.tree.map(jnp.copy,
+                                           dstate["online"]["enc"])
+                              if plan.align else None)
+                outcome = None
+                if sim is not None:
+                    up_spec = wire.plan_specs(state["online"],
+                                              plan)["upload"]
+                    outcome = sim.begin_round(
+                        plan, cohort, down_bytes=down["wire_bytes"],
+                        up_bytes=wire.upload_stats(up_spec)["wire_bytes"])
+                    participants = list(outcome.train_ids)
+                else:
+                    participants = cohort
+                # per-participant keys are split here, identically for
+                # both engines, so the main RNG chain (and the calibration
+                # key below) is engine-independent
+                client_keys = []
+                for _ in participants:
+                    key, kc = jax.random.split(key)
+                    client_keys.append(kc)
+                train_span = tracer.span("local_train", cat="fl",
+                                         participants=len(participants))
+                if sim is not None and sim.policy.needs_client_trees:
+                    # buffered-async: the engine returns per-client decoded
+                    # trees; the policy buffers them and aggregates
+                    # arrivals staleness-weighted (possibly rounds after
+                    # they trained)
+                    with train_span:
+                        if participants:
+                            trees, losses, up = eng.run_round(
+                                dstate, plan, participants, client_keys,
+                                lr, global_enc,
+                                server_online=state["online"],
+                                collect=True)
+                        else:  # every sampled candidate was busy/offline
+                            trees, losses = [], []
+                            up = wire.upload_stats(up_spec)
+                    new_online, outcome = sim.complete_round_async(outcome,
+                                                                   trees)
+                else:
+                    with train_span:
+                        new_online, losses, up = eng.run_round(
+                            dstate, plan, participants, client_keys, lr,
+                            global_enc, server_online=state["online"])
+                    if sim is not None:
+                        outcome = sim.complete_round(outcome)
+                state = {**state, "online": new_online}
+                if plan.server_calibrate and aux_images is not None:
+                    key, kg = jax.random.split(key)
+                    with tracer.span("calibrate", cat="fl",
+                                     sub_layers=plan.sub_layers):
+                        state = server.server_calibrate(
+                            state, aux_images, get_calib(plan.sub_layers),
+                            opt, epochs=fl.server_epochs,
+                            batch_size=train_cfg.batch_size, key=kg, lr=lr)
+                cb = comm.round_comm_bytes(state["online"], plan,
+                                           include_heads=fl.include_heads)
+                if losses:
+                    hist.loss.append(sum(losses) / len(losses))
+                else:  # async round with no launches: carry the mean fwd
+                    hist.loss.append(hist.loss[-1] if hist.loss
+                                     else float("nan"))
+                hist.round_stage.append(plan.stage)
+                hist.download_bytes.append(cb["download"])
+                hist.upload_bytes.append(cb["upload"])
+                hist.wire_download_bytes.append(down["wire_bytes"])
+                hist.wire_upload_bytes.append(up["wire_bytes"])
+                sim_log = ""
+                if outcome is not None:
+                    hist.round_wall_clock.append(outcome.wall_clock_s)
+                    hist.device_seconds.append(outcome.device_seconds)
+                    hist.energy_joules.append(outcome.energy_j)
+                    hist.dropped_clients.append(len(outcome.dropped))
+                    hist.participants.append(tuple(participants))
+                    sim_log = (f" sim {outcome.wall_clock_s:.1f}s "
+                               f"dropped {len(outcome.dropped)}")
+                round_span.set(
+                    loss=hist.loss[-1], lr=lr,
+                    download_bytes=cb["download"],
+                    upload_bytes=cb["upload"],
+                    wire_download_bytes=down["wire_bytes"],
+                    wire_upload_bytes=up["wire_bytes"],
+                    participants=len(participants),
+                    dropped=len(outcome.dropped) if outcome else 0)
+            if obs.enabled:
+                met.counter("fl.rounds").inc()
+                met.counter("comm.download_bytes").inc(cb["download"])
+                met.counter("comm.upload_bytes").inc(cb["upload"])
+                met.counter("wire.download_bytes").inc(down["wire_bytes"])
+                met.counter("wire.upload_bytes").inc(up["wire_bytes"])
+                met.histogram("round.host_seconds").observe(
+                    time.perf_counter() - host_t0)
+                met.histogram("round.loss").observe(hist.loss[-1])
+                if outcome is not None:
+                    met.histogram("sim.round_wall_clock_s").observe(
+                        outcome.wall_clock_s)
+                    met.counter("sim.energy_j").inc(outcome.energy_j)
+                    met.counter("sim.dropped_clients").inc(
+                        len(outcome.dropped))
+                entries = (eng.compile_cache_size()
+                           + wire.compile_cache_size())
+                if entries > jit_entries:
+                    met.counter("jit.recompiles").inc(entries - jit_entries)
+                    jit_entries = entries
+                met.gauge("jit.cache_entries").set(jit_entries)
+            if log:
+                log(format_round_line(
+                    plan.round_idx, fl.rounds, plan.stage, hist.loss[-1],
+                    lr=lr, down_mb=cb["download"] / 1e6,
+                    up_mb=cb["upload"] / 1e6,
+                    wire_mb=(down["wire_bytes"] + up["wire_bytes"]) / 1e6,
+                    extra=sim_log))
+    if obs.enabled:
+        met.gauge("wire.compression_ratio").set(hist.compression_ratio)
+    obs.stop_profiler()
     return state, hist

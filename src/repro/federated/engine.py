@@ -50,12 +50,26 @@ import numpy as np
 from repro.data.partition import stack_shards
 from repro.federated import aggregate, client as client_mod
 from repro.federated import transport as transport_mod
+from repro.obs import NOOP_OBS
 
 ENGINES = ("sequential", "vmap")
 
 
 def _pool_len(pool) -> int:
     return jax.tree.leaves(pool)[0].shape[0]
+
+
+def jit_cache_entries(fns) -> int:
+    """Total compiled-specialization count across ``fns`` — jit'd
+    callables expose ``_cache_size()``; plain host functions (the pallas
+    wire path) count zero. The driver's jit-recompile counter diffs this
+    against the previous round to surface silent retraces."""
+    total = 0
+    for f in fns:
+        size = getattr(f, "_cache_size", None)
+        if size is not None:
+            total += size()
+    return total
 
 
 def build_round_program(client_init, client_step, extract,
@@ -136,13 +150,17 @@ class SequentialEngine:
     name = "sequential"
 
     def __init__(self, *, encoder, ssl_cfg, opt, fl, train_cfg, images,
-                 client_indices, transport=None):
+                 client_indices, transport=None, obs=None):
         self.encoder, self.ssl_cfg, self.opt = encoder, ssl_cfg, opt
         self.fl, self.train_cfg = fl, train_cfg
         self.images, self.client_indices = images, client_indices
         self.counts = [len(ix) for ix in client_indices]
         self.transport = transport or transport_mod.Transport("fp32")
+        self.obs = obs if obs is not None else NOOP_OBS
         self._steps: Dict[tuple, object] = {}
+
+    def compile_cache_size(self) -> int:
+        return jit_cache_entries(self._steps.values())
 
     def _step(self, plan):
         sig = (plan.sub_layers, plan.active_from, plan.align,
@@ -156,25 +174,31 @@ class SequentialEngine:
 
     def run_round(self, state, plan, participants, client_keys, lr,
                   global_enc, server_online, collect=False):
+        tracer = self.obs.tracer
         step_fn = self._step(plan)
         outs, losses = [], []
         for i, kc in zip(participants, client_keys):
-            online_i, m = client_mod.local_train(
-                state, self.images[self.client_indices[i]], step_fn,
-                self.opt, epochs=self.fl.local_epochs,
-                batch_size=self.train_cfg.batch_size, key=kc, lr=lr,
-                global_enc=global_enc)
-            outs.append(online_i)
-            losses.append(float(m["loss"]))
+            with tracer.span("client.train", cat="engine",
+                             client=int(i)) as sp:
+                online_i, m = client_mod.local_train(
+                    state, self.images[self.client_indices[i]], step_fn,
+                    self.opt, epochs=self.fl.local_epochs,
+                    batch_size=self.train_cfg.batch_size, key=kc, lr=lr,
+                    global_enc=global_enc)
+                outs.append(online_i)
+                losses.append(float(m["loss"]))
+                sp.set(loss=losses[-1])
         if collect:
             trees, stats = self.transport.decode_uploads(
                 server_online, outs, participants, plan,
                 ref_online=state["online"])
             return trees, losses, stats
         w = aggregate.client_weights([self.counts[i] for i in participants])
-        new_online, stats = self.transport.aggregate_uploads(
-            server_online, outs, participants, plan, w,
-            ref_online=state["online"])
+        with tracer.span("aggregate", cat="engine", engine=self.name,
+                         clients=len(participants)):
+            new_online, stats = self.transport.aggregate_uploads(
+                server_online, outs, participants, plan, w,
+                ref_online=state["online"])
         return new_online, losses, stats
 
 
@@ -184,10 +208,11 @@ class VmapEngine:
     name = "vmap"
 
     def __init__(self, *, encoder, ssl_cfg, opt, fl, train_cfg, images,
-                 client_indices, transport=None):
+                 client_indices, transport=None, obs=None):
         self.encoder, self.ssl_cfg, self.opt = encoder, ssl_cfg, opt
         self.fl, self.train_cfg = fl, train_cfg
         self.transport = transport or transport_mod.Transport("fp32")
+        self.obs = obs if obs is not None else NOOP_OBS
         self.counts = [len(ix) for ix in client_indices]
         bs = train_cfg.batch_size
         if min(self.counts) < bs:
@@ -210,6 +235,9 @@ class VmapEngine:
         self._all_weights = aggregate.client_weights(self.counts)
         self._full_shards = None
         self._programs: Dict[tuple, object] = {}
+
+    def compile_cache_size(self) -> int:
+        return jit_cache_entries(self._programs.values())
 
     def _gather(self, idx):
         """(C, n_max) pool indices -> client-stacked shard data."""
@@ -272,12 +300,20 @@ class VmapEngine:
                 [self.counts[i] for i in participants])
         spec = self.transport.plan_specs(server_online, plan)["upload"]
         residuals = self.transport.gather_residuals(participants, spec)
-        result, losses, new_res = self._program(
-            plan, spec, fedavg=not collect)(
-            {"state": state, "global_enc": global_enc,
-             "server": server_online}, shards,
-            jnp.stack(idxs), jnp.stack(keys),
-            jnp.asarray(np.stack(valids)), w, jnp.float32(lr), residuals)
+        # the whole round — every client's local steps, the in-program
+        # wire path and FedAvg — is one dispatch, so this span *is* the
+        # device time; per-client structure only exists inside XLA
+        with self.obs.tracer.span("engine.dispatch", cat="engine",
+                                  engine=self.name,
+                                  participants=len(participants),
+                                  programs=len(self._programs)):
+            result, losses, new_res = self._program(
+                plan, spec, fedavg=not collect)(
+                {"state": state, "global_enc": global_enc,
+                 "server": server_online}, shards,
+                jnp.stack(idxs), jnp.stack(keys),
+                jnp.asarray(np.stack(valids)), w, jnp.float32(lr),
+                residuals)
         self.transport.store_residuals(participants, spec, new_res)
         if collect:
             # unstack the decoded client axis into per-client trees (the

@@ -51,6 +51,7 @@ import numpy as np
 from repro.configs.base import ShapeConfig
 from repro.federated import aggregate
 from repro.federated.fleet import Fleet, make_fleet
+from repro.obs import NOOP_OBS
 from repro.roofline import analysis
 
 POLICIES = ("synchronous", "deadline", "buffered-async")
@@ -337,7 +338,7 @@ class Simulation:
     """Binds a fleet to a round policy and owns the host-side randomness
     (availability draws) and the per-round outcome log."""
 
-    def __init__(self, fleet: Fleet, policy, *, seed: int = 0):
+    def __init__(self, fleet: Fleet, policy, *, seed: int = 0, obs=None):
         self.fleet = fleet
         self.policy = policy
         # availability stream is independent of the jax training chain:
@@ -345,6 +346,12 @@ class Simulation:
         self._avail_rng = np.random.default_rng([seed, 0x5EED])
         self.records: List[RoundOutcome] = []
         self._prepared = False
+        # observability: policy decisions become instant events; each
+        # trained client's simulated round becomes a span on its own
+        # virtual track, laid out on the cumulative simulated clock —
+        # a fleet round reads like a real profile in Perfetto
+        self.obs = obs if obs is not None else NOOP_OBS
+        self._vclock = 0.0
 
     @property
     def overcommit(self) -> float:
@@ -394,11 +401,34 @@ class Simulation:
                      for i, c in enumerate(cohort)}
         outcome = self.policy.resolve(len(self.records), cohort,
                                       self._costs, available)
+        self.obs.tracer.instant(
+            f"policy.{self.policy.name}", cat="sim",
+            round=outcome.round_idx, cohort=list(outcome.cohort),
+            train=list(outcome.train_ids), dropped=list(outcome.dropped),
+            deadline_s=outcome.deadline_s)
         return outcome
+
+    def _emit_round_spans(self, outcome: RoundOutcome):
+        """Per-client simulated-round spans on the virtual timeline (one
+        track per client, timestamps in cumulative simulated seconds)."""
+        tracer = self.obs.tracer
+        for cid in outcome.train_ids:
+            cost = self._costs[cid]
+            dur = cost.total_s
+            if outcome.deadline_s is not None:
+                dur = min(dur, outcome.deadline_s)
+            tracer.virtual_span(
+                f"client {cid} round {outcome.round_idx}",
+                f"sim client {cid}", self._vclock, dur,
+                client=cid, round=outcome.round_idx,
+                download_s=cost.download_s, compute_s=cost.compute_s,
+                upload_s=cost.upload_s, energy_j=cost.energy_j)
+        self._vclock += outcome.wall_clock_s
 
     def complete_round(self, outcome: RoundOutcome) -> RoundOutcome:
         """Synchronous/deadline: the provisional outcome is final."""
         self.records.append(outcome)
+        self._emit_round_spans(outcome)
         return outcome
 
     def complete_round_async(self, outcome: RoundOutcome, trees
@@ -408,6 +438,7 @@ class Simulation:
         new_online, final = self.policy.complete(outcome, self._costs,
                                                  self.counts, trees)
         self.records.append(final)
+        self._emit_round_spans(final)
         return new_online, final
 
 

@@ -66,6 +66,7 @@ from repro.federated import aggregate
 from repro.federated.leaves import classify_leaf, path_keys
 from repro.kernels import hostwire
 from repro.kernels import ops as kops
+from repro.obs import NOOP_OBS
 
 WIRE_DTYPE = jnp.float32          # payload element dtype before encoding
 CODECS = ("fp32", "fp16", "bf16", "int8", "topk")
@@ -436,18 +437,25 @@ class Transport:
     the driver folds into ``FLHistory``."""
 
     def __init__(self, codec="fp32", *, include_heads: bool = True,
-                 kernels: str = "xla"):
+                 kernels: str = "xla", obs=None):
         if kernels not in TRANSPORT_KERNELS:
             raise ValueError(f"unknown transport kernels '{kernels}'; "
                              f"one of {TRANSPORT_KERNELS}")
         self.codec = make_codec(codec) if isinstance(codec, str) else codec
         self.include_heads = include_heads
         self.kernels = kernels
+        self.obs = obs if obs is not None else NOOP_OBS
         self._specs: Dict[Tuple, PayloadSpec] = {}
         self._wire_bytes: Dict[Tuple, int] = {}
         self._roundtrips: Dict[Tuple, object] = {}
         self._resid: Dict[Tuple, Tuple[Tuple, object]] = {}
         self._mirror: Optional[Tuple[Tuple, object]] = None
+
+    def compile_cache_size(self) -> int:
+        """Compiled-specialization count across the cached wire programs
+        (the pallas-mode entries are plain host callables and count 0)."""
+        from repro.federated.engine import jit_cache_entries
+        return jit_cache_entries(self._roundtrips.values())
 
     # -- specs --------------------------------------------------------------
     def spec(self, params, stage_range, include_embed: bool) -> PayloadSpec:
@@ -651,23 +659,29 @@ class Transport:
         re-sync that seeds the mirror; later rounds ship the sparsified
         difference against it."""
         spec = self.plan_specs(online, plan)["download"]
-        if not self.codec.delta:
-            view = self._bcast_fn(spec)(online)
-            wire = self.wire_bytes(spec)
-        else:
-            held = self._mirror
-            if held is None or held[0] != spec.sig:
-                flat = self._pack_fn(spec)(online)
-                if self.kernels == "pallas":
-                    view = kernel_unpack(online, flat, spec)
-                else:
-                    view = unpack_stage_payload(online, flat, spec)
-                self._mirror = (spec.sig, flat)
-                wire = spec.payload_bytes          # dense sync round
-            else:
-                view, mirror = self._bcast_delta_fn(spec)(online, held[1])
-                self._mirror = (spec.sig, mirror)
+        with self.obs.tracer.span("wire.download", cat="transport",
+                                  codec=self.codec.name,
+                                  kernels=self.kernels) as sp:
+            if not self.codec.delta:
+                view = self._bcast_fn(spec)(online)
                 wire = self.wire_bytes(spec)
+            else:
+                held = self._mirror
+                if held is None or held[0] != spec.sig:
+                    flat = self._pack_fn(spec)(online)
+                    if self.kernels == "pallas":
+                        view = kernel_unpack(online, flat, spec)
+                    else:
+                        view = unpack_stage_payload(online, flat, spec)
+                    self._mirror = (spec.sig, flat)
+                    wire = spec.payload_bytes      # dense sync round
+                    sp.set(dense_sync=True)
+                else:
+                    view, mirror = self._bcast_delta_fn(spec)(online,
+                                                              held[1])
+                    self._mirror = (spec.sig, mirror)
+                    wire = self.wire_bytes(spec)
+            sp.set(wire_bytes=wire, payload_bytes=spec.payload_bytes)
         return view, {"wire_bytes": wire,
                       "payload_bytes": spec.payload_bytes}
 
@@ -681,14 +695,26 @@ class Transport:
         spec = self.plan_specs(server_online, plan)["upload"]
         ref_online = server_online if ref_online is None else ref_online
         fn = self._upload_fn(spec)
-        ref_flat = self._pack_fn(spec)(ref_online)
-        res = self.gather_residuals(client_ids, spec)
-        trees, new_res = [], []
-        for out, r in zip(outs, res):
-            tree, nr = fn(server_online, ref_flat, out, r)
-            trees.append(tree)
-            new_res.append(nr)
-        self.store_residuals(client_ids, spec, new_res)
+        tracer = self.obs.tracer
+        with tracer.span("wire.upload", cat="transport",
+                         codec=self.codec.name, kernels=self.kernels,
+                         clients=len(client_ids),
+                         wire_bytes=self.wire_bytes(spec),
+                         payload_bytes=spec.payload_bytes):
+            ref_flat = self._pack_fn(spec)(ref_online)
+            res = self.gather_residuals(client_ids, spec)
+            trees, new_res = [], []
+            for cid, out, r in zip(client_ids, outs, res):
+                # client ids are ints in the driver but any hashable in
+                # direct Transport use — keep strings as-is in the span
+                with tracer.span("wire.upload.client", cat="transport",
+                                 client=cid if isinstance(cid, str)
+                                 else int(cid),
+                                 codec=self.codec.name):
+                    tree, nr = fn(server_online, ref_flat, out, r)
+                trees.append(tree)
+                new_res.append(nr)
+            self.store_residuals(client_ids, spec, new_res)
         return trees, self.upload_stats(spec)
 
     def aggregate_uploads(self, server_online, outs, client_ids, plan,

@@ -1,0 +1,252 @@
+"""Trace analysis CLI — paper tables as views over telemetry.
+
+Reads the JSONL traces the observability layer writes (``--trace`` on
+``repro.launch.train``, ``run_fedssl(obs=...)``) and regenerates, from the
+spans alone:
+
+  round-time breakdown   wall-clock per phase (download / local_train /
+                         calibrate, engine and transport child spans)
+                         aggregated across rounds, per trace.
+  comm table             per-schedule analytic + measured wire bytes
+                         summed over the ``round`` spans, with ratios
+                         against the e2e trace when one is among the
+                         inputs — the paper's Table 1/3 communication
+                         columns (0.08 / 0.31 / 0.54 vs FedMoCo) read
+                         straight off a trace.
+
+Because byte telemetry depends only on (parameter shapes x round plan),
+the CLI can also *emit* a paper-scale comm trace without training
+(``--emit-comm``): it walks the full 180-round schedule over the
+``eval_shape``-abstract ViT-T + MoCo tree, routes every round's payload
+specs through the real ``Transport`` byte accounting, and records the
+same ``round`` spans the driver would — seconds instead of GPU-days, and
+byte-for-byte equal to ``comm.round_comm_bytes`` (fp32). The paper table
+is then just this CLI analyzing its own traces:
+
+  python -m repro.launch.trace --emit-comm --out-dir results/
+  python -m repro.launch.trace results/comm_trace_*.jsonl
+
+See docs/observability.md.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+from typing import Any, Dict, List, Sequence, Tuple
+
+from repro.obs import read_jsonl, write_jsonl
+from repro.obs.trace import Tracer
+
+COMM_ATTRS = ("download_bytes", "upload_bytes", "wire_download_bytes",
+              "wire_upload_bytes")
+
+
+# ---------------------------------------------------------------------------
+# analysis: traces -> tables
+# ---------------------------------------------------------------------------
+def run_args(events: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    """Attributes of the trace's ``run`` span (schedule, engine, codec)."""
+    for e in events:
+        if e["name"] == "run":
+            return dict(e["args"])
+    return {}
+
+
+def round_spans(events: Sequence[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    return [e for e in events
+            if e["name"] == "round" and e["ph"] == "X"]
+
+
+def comm_totals(events: Sequence[Dict[str, Any]]) -> Dict[str, int]:
+    """Sum the per-round byte attributes over the trace's round spans."""
+    totals = {a: 0 for a in COMM_ATTRS}
+    for e in round_spans(events):
+        for a in COMM_ATTRS:
+            totals[a] += int(e["args"].get(a, 0))
+    totals["comm_bytes"] = (totals["download_bytes"]
+                            + totals["upload_bytes"])
+    totals["wire_bytes"] = (totals["wire_download_bytes"]
+                            + totals["wire_upload_bytes"])
+    totals["rounds"] = len(round_spans(events))
+    return totals
+
+
+def comm_table(traces: Sequence[Tuple[Dict, List[Dict]]]
+               ) -> List[Dict[str, Any]]:
+    """One row per trace: schedule, byte totals, and — when an ``e2e``
+    trace is among the inputs — the download/upload/total ratios against
+    it (the paper's comm multiplier columns)."""
+    rows = []
+    for header, events in traces:
+        info = run_args(events)
+        row = {"schedule": info.get("schedule",
+                                    header.get("schedule", "?")),
+               "codec": info.get("codec", "?")}
+        row.update(comm_totals(events))
+        rows.append(row)
+    base = next((r for r in rows if r["schedule"] == "e2e"), None)
+    for r in rows:
+        if base is not None and base["comm_bytes"] > 0:
+            r["download_ratio"] = r["download_bytes"] / max(
+                1, base["download_bytes"])
+            r["upload_ratio"] = r["upload_bytes"] / max(
+                1, base["upload_bytes"])
+            r["comm_ratio"] = r["comm_bytes"] / base["comm_bytes"]
+    return rows
+
+
+def round_breakdown(events: Sequence[Dict[str, Any]]
+                    ) -> Dict[str, Dict[str, float]]:
+    """Aggregate span durations by name: {name: {count, total_s, mean_s}}
+    for every completed wall-clock span (virtual sim tracks excluded)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for e in events:
+        if e["ph"] != "X" or e["cat"] == "sim":
+            continue
+        d = out.setdefault(e["name"], {"count": 0, "total_s": 0.0})
+        d["count"] += 1
+        d["total_s"] += e["dur"] / 1e6
+    for d in out.values():
+        d["mean_s"] = d["total_s"] / d["count"]
+    return out
+
+
+def print_breakdown(path, events):
+    info = run_args(events)
+    label = " ".join(f"{k}={info[k]}" for k in
+                     ("schedule", "engine", "codec") if k in info)
+    print(f"\n-- {path}: {label}")
+    br = round_breakdown(events)
+    order = sorted(br, key=lambda n: -br[n]["total_s"])
+    print(f"   {'span':24s} {'count':>6s} {'total':>10s} {'mean':>10s}")
+    for name in order:
+        d = br[name]
+        print(f"   {name:24s} {d['count']:6d} {d['total_s']:9.3f}s "
+              f"{d['mean_s'] * 1e3:8.2f}ms")
+
+
+def print_comm_table(rows):
+    print(f"\n== comm totals (from round spans) ==")
+    hdr = (f"{'schedule':12s} {'rounds':>6s} {'down(MB)':>10s} "
+           f"{'up(MB)':>10s} {'wire(MB)':>10s}")
+    has_ratio = any("comm_ratio" in r for r in rows)
+    if has_ratio:
+        hdr += f" {'down x':>8s} {'up x':>8s} {'comm x':>8s}"
+    print(hdr)
+    for r in rows:
+        line = (f"{r['schedule']:12s} {r['rounds']:6d} "
+                f"{r['download_bytes'] / 1e6:10.1f} "
+                f"{r['upload_bytes'] / 1e6:10.1f} "
+                f"{r['wire_bytes'] / 1e6:10.1f}")
+        if "comm_ratio" in r:
+            line += (f" {r['download_ratio']:8.2f} {r['upload_ratio']:8.2f}"
+                     f" {r['comm_ratio']:8.2f}")
+        print(line)
+    if has_ratio:
+        print("(ratios vs the e2e trace — paper Table 3 comm column: "
+              "layerwise 0.08, lw_fedssl 0.31, progressive 0.54)")
+
+
+# ---------------------------------------------------------------------------
+# emit: paper-scale comm traces without training
+# ---------------------------------------------------------------------------
+def emit_comm_trace(schedule: str, out, *, arch: str = "vit-tiny",
+                    rounds: int = 180, codec: str = "fp32",
+                    include_heads: bool = False) -> pathlib.Path:
+    """Walk ``schedule`` over the abstract (eval_shape) model tree and
+    write a trace whose ``round`` spans carry exactly the byte attributes
+    a real traced run records — the comm accounting is the driver's own
+    (``comm.round_comm_bytes`` + ``Transport`` wire sizes), only the
+    training in between is skipped. ``include_heads=False`` matches the
+    paper's encoder-only comm columns (``benchmarks.resources``).
+
+    For delta codecs (topk) the recorded wire bytes are the steady-state
+    sparse sizes; the dense re-sync round at stage transitions is a
+    live-run behavior this dry walk does not model."""
+    import jax
+
+    from repro.configs.base import FLConfig, SSLConfig, load_arch
+    from repro.core import schedule as sched
+    from repro.core import ssl as ssl_mod
+    from repro.federated import comm
+    from repro.federated import transport as transport_mod
+
+    cfg = load_arch(arch)
+    ssl_cfg = SSLConfig()
+    enc = ssl_mod.make_vit_encoder(cfg)
+    state = jax.eval_shape(
+        lambda k: ssl_mod.ssl_init(k, enc, ssl_cfg), jax.random.PRNGKey(0))
+    online = state["online"]
+    wire = transport_mod.Transport(codec, include_heads=include_heads)
+    fl = FLConfig(rounds=rounds, schedule=schedule,
+                  include_heads=include_heads)
+    plans = sched.build_schedule(fl, enc.num_stages)
+    tracer = Tracer()
+    with tracer.span("run", cat="fl", mode="comm-dryrun",
+                     schedule=schedule, arch=arch, codec=wire.codec.name,
+                     rounds=rounds, include_heads=include_heads):
+        for plan in plans:
+            cb = comm.round_comm_bytes(online, plan,
+                                       include_heads=include_heads)
+            specs = wire.plan_specs(online, plan)
+            with tracer.span("round", cat="fl", round=plan.round_idx,
+                             stage=plan.stage,
+                             download_bytes=cb["download"],
+                             upload_bytes=cb["upload"],
+                             wire_download_bytes=wire.wire_bytes(
+                                 specs["download"]),
+                             wire_upload_bytes=wire.wire_bytes(
+                                 specs["upload"])):
+                pass
+    return write_jsonl(tracer, out, source="comm-dryrun")
+
+
+def main(argv=None):
+    from repro.core import schedule as sched
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.trace",
+        description="Analyze repro JSONL traces (round-time breakdown + "
+                    "comm table), or emit paper-scale comm traces "
+                    "without training (--emit-comm).")
+    ap.add_argument("traces", nargs="*",
+                    help="JSONL trace files to analyze")
+    ap.add_argument("--emit-comm", action="store_true",
+                    help="emit comm-dryrun traces instead of analyzing")
+    ap.add_argument("--schedule", default=None, choices=sched.SCHEDULES,
+                    help="emit only this schedule (default: all five)")
+    ap.add_argument("--arch", default="vit-tiny")
+    ap.add_argument("--rounds", type=int, default=180)
+    ap.add_argument("--codec", default="fp32")
+    ap.add_argument("--include-heads", action="store_true",
+                    help="count the SSL heads in the payload (paper "
+                         "tables are encoder-only)")
+    ap.add_argument("--out-dir", default="results",
+                    help="--emit-comm output directory "
+                         "(comm_trace_<schedule>.jsonl)")
+    args = ap.parse_args(argv)
+
+    if args.emit_comm:
+        schedules = ((args.schedule,) if args.schedule
+                     else sched.SCHEDULES)
+        for s in schedules:
+            out = pathlib.Path(args.out_dir) / f"comm_trace_{s}.jsonl"
+            emit_comm_trace(s, out, arch=args.arch, rounds=args.rounds,
+                            codec=args.codec,
+                            include_heads=args.include_heads)
+            print(f"wrote {out}")
+        if not args.traces:
+            args.traces = [str(pathlib.Path(args.out_dir)
+                               / f"comm_trace_{s}.jsonl")
+                           for s in schedules]
+
+    if not args.traces:
+        ap.error("nothing to do: pass trace files and/or --emit-comm")
+    loaded = [(p, read_jsonl(p)) for p in args.traces]
+    for p, (header, events) in loaded:
+        print_breakdown(p, events)
+    print_comm_table(comm_table([t for _, t in loaded]))
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import pathlib
 import time
 
 import jax
@@ -49,8 +50,37 @@ from repro.federated import simulation as sim_mod
 from repro.federated import transport as transport_mod
 from repro.federated.driver import run_fedssl
 from repro.federated import eval as fl_eval
+from repro.obs import (ConsoleRenderer, format_round_line, make_obs,
+                       write_history_json)
 from repro.optim import make_optimizer
 from repro.optim.schedules import learning_rate, scaled_base_lr
+
+
+def obs_from_args(args, mode):
+    """Observability bundle from --trace/--metrics/--profile-dir."""
+    return make_obs(trace=args.trace, metrics=args.metrics,
+                    profile_dir=args.profile_dir or None,
+                    mode=mode, schedule=args.schedule, engine=args.engine,
+                    codec=args.codec, seed=args.seed)
+
+
+def export_obs(obs, args, hist=None):
+    """Write the enabled artifacts under --obs-dir and report the paths."""
+    if not obs.enabled:
+        return {}
+    out = pathlib.Path(args.obs_dir)
+    written = obs.export(
+        trace_jsonl=out / "run_trace.jsonl" if args.trace else None,
+        chrome_trace=out / "run_trace.chrome.json" if args.trace else None,
+        metrics_csv=out / "run_metrics.csv" if args.metrics else None,
+        schedule=args.schedule, engine=args.engine, codec=args.codec)
+    if args.metrics and hist is not None:
+        written["history_json"] = write_history_json(
+            hist, out / "run_history.json", schedule=args.schedule,
+            engine=args.engine, codec=args.codec)
+    for kind, path in sorted(written.items()):
+        print(f"obs: wrote {kind} -> {path}")
+    return written
 
 
 def train_vit(args):
@@ -73,12 +103,15 @@ def train_vit(args):
         idx = iid_partition(args.samples, fl.num_clients, seed=args.seed)
     aux = images[:max(args.batch, args.samples // 10)]
     sim = make_sim_from_args(args, fl.num_clients)
+    obs = obs_from_args(args, "vit")
     t0 = time.time()
-    state, hist = run_fedssl(
-        cfg, ssl_cfg, fl, tc, images=images,
-        client_indices=[jnp.asarray(i) for i in idx], aux_images=aux,
-        key=key, log=print, engine=args.engine, codec=args.codec,
-        transport_kernels=args.transport_kernels, sim=sim)
+    with ConsoleRenderer(live=args.live) as log:
+        state, hist = run_fedssl(
+            cfg, ssl_cfg, fl, tc, images=images,
+            client_indices=[jnp.asarray(i) for i in idx], aux_images=aux,
+            key=key, log=log, engine=args.engine, codec=args.codec,
+            transport_kernels=args.transport_kernels, sim=sim, obs=obs)
+    export_obs(obs, args, hist=hist)
     print(f"training done in {time.time() - t0:.1f}s; "
           f"total comm {hist.total_comm / 1e6:.2f} MB analytic, "
           f"{hist.total_wire / 1e6:.2f} MB on the wire "
@@ -148,8 +181,9 @@ def train_lm(args):
         return (b * tc.batch_size) % max(1, len(ix) - tc.batch_size)
 
     use_vmap = args.engine == "vmap"
+    obs = obs_from_args(args, "lm")
     wire = transport_mod.Transport(args.codec,
-                                   kernels=args.transport_kernels)
+                                   kernels=args.transport_kernels, obs=obs)
     all_clients = list(range(fl.num_clients))
     if use_vmap:
         from repro.data.partition import stack_shards
@@ -186,50 +220,89 @@ def train_lm(args):
 
     hist = []
     wire_mb = 0.0
-    for plan in plans:
-        if plan.new_stage and fl.weight_transfer:
-            params = sched.transfer_model(params, cfg, plan.stage)
-        lr = float(learning_rate(plan.round_idx, fl.rounds, base_lr,
-                                 tc.lr_schedule))
-        # both directions route through the wire transport: clients train
-        # from the decoded broadcast, FedAvg consumes decoded uploads
-        dparams, down = wire.broadcast(params, plan)
-        global_params = (jax.tree.map(jnp.copy, dparams) if plan.align
-                         else None)
-        if use_vmap:
-            spec = wire.plan_specs(params, plan)["upload"]
-            up = wire.upload_stats(spec)
-            res = wire.gather_residuals(all_clients, spec)
-            new_params, lvec, new_res = get_round(plan, spec)(
-                {"params": dparams, "global_params": global_params,
-                 "server": params},
-                stacked, batch_idx, step_keys, valid, w, jnp.float32(lr),
-                res)
-            wire.store_residuals(all_clients, spec, new_res)
-            params = new_params
-            losses = [float(x) for x in np.asarray(lvec)]
-        else:
-            step = get_step(plan)
-            outs, losses = [], []
-            for ci in range(fl.num_clients):
-                p_i = jax.tree.map(jnp.asarray, dparams)
-                o_i = opt.init(p_i)
-                ix = shards[ci]
-                nb = max(1, len(ix) // tc.batch_size)
-                for b in range(nb * fl.local_epochs):
-                    sel = ix[batch_start(ix, b):][:tc.batch_size]
-                    batch = {"tokens": toks[sel], "labels": labs[sel]}
-                    p_i, o_i, m = step(p_i, o_i, batch, global_params,
-                                       jnp.float32(lr))
-                outs.append(p_i)
-                losses.append(float(m["loss"]))
-            params, up = wire.aggregate_uploads(params, outs, all_clients,
-                                                plan, w, ref_online=dparams)
-        wire_mb += (down["wire_bytes"] + up["wire_bytes"]) / 1e6
-        hist.append(sum(losses) / len(losses))
-        print(f"round {plan.round_idx + 1}/{fl.rounds} stage {plan.stage} "
-              f"loss {hist[-1]:.4f} "
-              f"wire {(down['wire_bytes'] + up['wire_bytes']) / 1e6:.2f}MB")
+    tracer, log = obs.tracer, ConsoleRenderer(live=args.live)
+    obs.start_profiler()
+    with tracer.span("run", cat="fl", mode="lm-fedssl",
+                     schedule=fl.schedule, engine=args.engine,
+                     codec=wire.codec.name, kernels=args.transport_kernels,
+                     rounds=fl.rounds, clients=fl.num_clients):
+        for plan in plans:
+            round_span = tracer.span("round", cat="fl",
+                                     round=plan.round_idx, stage=plan.stage)
+            t_round = time.perf_counter()
+            with round_span:
+                if plan.new_stage and fl.weight_transfer:
+                    params = sched.transfer_model(params, cfg, plan.stage)
+                lr = float(learning_rate(plan.round_idx, fl.rounds, base_lr,
+                                         tc.lr_schedule))
+                # both directions route through the wire transport: clients
+                # train from the decoded broadcast, FedAvg consumes decoded
+                # uploads
+                dparams, down = wire.broadcast(params, plan)
+                global_params = (jax.tree.map(jnp.copy, dparams)
+                                 if plan.align else None)
+                train_span = tracer.span("local_train", cat="fl",
+                                         engine=args.engine,
+                                         clients=fl.num_clients)
+                if use_vmap:
+                    spec = wire.plan_specs(params, plan)["upload"]
+                    up = wire.upload_stats(spec)
+                    res = wire.gather_residuals(all_clients, spec)
+                    with train_span:
+                        new_params, lvec, new_res = get_round(plan, spec)(
+                            {"params": dparams,
+                             "global_params": global_params,
+                             "server": params},
+                            stacked, batch_idx, step_keys, valid, w,
+                            jnp.float32(lr), res)
+                    wire.store_residuals(all_clients, spec, new_res)
+                    params = new_params
+                    losses = [float(x) for x in np.asarray(lvec)]
+                else:
+                    step = get_step(plan)
+                    outs, losses = [], []
+                    with train_span:
+                        for ci in range(fl.num_clients):
+                            p_i = jax.tree.map(jnp.asarray, dparams)
+                            o_i = opt.init(p_i)
+                            ix = shards[ci]
+                            nb = max(1, len(ix) // tc.batch_size)
+                            for b in range(nb * fl.local_epochs):
+                                sel = ix[batch_start(ix, b):][:tc.batch_size]
+                                batch = {"tokens": toks[sel],
+                                         "labels": labs[sel]}
+                                p_i, o_i, m = step(p_i, o_i, batch,
+                                                   global_params,
+                                                   jnp.float32(lr))
+                            outs.append(p_i)
+                            losses.append(float(m["loss"]))
+                    params, up = wire.aggregate_uploads(
+                        params, outs, all_clients, plan, w,
+                        ref_online=dparams)
+                wire_mb += (down["wire_bytes"] + up["wire_bytes"]) / 1e6
+                hist.append(sum(losses) / len(losses))
+                cb = comm.round_comm_bytes(params, plan)
+                round_span.set(loss=hist[-1], lr=lr,
+                               download_bytes=cb["download"],
+                               upload_bytes=cb["upload"],
+                               wire_download_bytes=down["wire_bytes"],
+                               wire_upload_bytes=up["wire_bytes"])
+            if obs.enabled:
+                met = obs.metrics
+                met.counter("fl.rounds").inc()
+                met.counter("comm.download_bytes").inc(cb["download"])
+                met.counter("comm.upload_bytes").inc(cb["upload"])
+                met.counter("wire.download_bytes").inc(down["wire_bytes"])
+                met.counter("wire.upload_bytes").inc(up["wire_bytes"])
+                met.histogram("round.loss").observe(hist[-1])
+                met.histogram("round.host_seconds").observe(
+                    time.perf_counter() - t_round)
+            log(format_round_line(
+                plan.round_idx, fl.rounds, plan.stage, hist[-1], lr=lr,
+                wire_mb=(down["wire_bytes"] + up["wire_bytes"]) / 1e6))
+    obs.stop_profiler()
+    log.close()
+    export_obs(obs, args)
     print(f"final loss {hist[-1]:.4f} (start {hist[0]:.4f}); "
           f"{wire_mb:.2f} MB/client on the wire ({args.codec})")
     return params, hist
@@ -309,6 +382,24 @@ def main():
     ap.add_argument("--depth-dropout", type=float, default=0.0)
     ap.add_argument("--dirichlet-beta", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", action="store_true",
+                    help="record a span trace of the run and write "
+                         "run_trace.jsonl + run_trace.chrome.json (the "
+                         "latter loads in Perfetto / chrome://tracing) "
+                         "under --obs-dir; analyze with `python -m "
+                         "repro.launch.trace` (docs/observability.md)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="record typed counters/gauges/histograms and "
+                         "write run_metrics.csv + run_history.json under "
+                         "--obs-dir")
+    ap.add_argument("--profile-dir", default="",
+                    help="also capture a jax.profiler (XLA-level) trace "
+                         "into this directory; spans are host-level")
+    ap.add_argument("--obs-dir", default="results",
+                    help="directory for observability artifacts")
+    ap.add_argument("--live", action="store_true",
+                    help="render round progress as a single live-updating "
+                         "console line instead of one line per round")
     args = ap.parse_args()
     try:
         transport_mod.make_codec(args.codec)

@@ -1,0 +1,37 @@
+"""Structured tracing + metrics for the FL stack (docs/observability.md).
+
+Public surface:
+
+  Tracer / NoopTracer / NOOP_TRACER      nested spans, instants, virtual
+                                         tracks (repro.obs.trace)
+  MetricsRegistry / NOOP_METRICS         counters, gauges, histograms
+                                         (repro.obs.metrics)
+  Observability / make_obs / NOOP_OBS    the bundle the stack threads
+                                         through itself (repro.obs.core)
+  write_jsonl / read_jsonl / write_chrome_trace / write_metrics_csv /
+  write_history_json / format_round_line / ConsoleRenderer
+                                         exporters (repro.obs.export)
+
+Everything is off by default: the driver, engines, transport and fleet
+simulator hold ``NOOP_OBS`` unless a real bundle is passed in
+(``run_fedssl(obs=...)`` / ``--trace`` / ``--metrics`` / ``--profile-dir``
+on ``repro.launch.train``). Analyze traces with
+``python -m repro.launch.trace``.
+"""
+from repro.obs.core import NOOP_OBS, Observability, make_obs
+from repro.obs.export import (ConsoleRenderer, chrome_trace_doc,
+                              format_round_line, metrics_csv_text,
+                              read_jsonl, trace_header, write_chrome_trace,
+                              write_history_json, write_jsonl,
+                              write_metrics_csv)
+from repro.obs.metrics import NOOP_METRICS, MetricsRegistry
+from repro.obs.trace import NOOP_TRACER, NoopTracer, Span, Tracer, is_tracing
+
+__all__ = [
+    "NOOP_OBS", "Observability", "make_obs",
+    "ConsoleRenderer", "chrome_trace_doc", "format_round_line",
+    "metrics_csv_text", "read_jsonl", "trace_header", "write_chrome_trace",
+    "write_history_json", "write_jsonl", "write_metrics_csv",
+    "NOOP_METRICS", "MetricsRegistry",
+    "NOOP_TRACER", "NoopTracer", "Span", "Tracer", "is_tracing",
+]

@@ -1,0 +1,92 @@
+"""The ``Observability`` bundle the FL stack threads through itself.
+
+One object carries the tracer, the metrics registry and the optional
+``jax.profiler`` hook; ``run_fedssl(obs=...)``, the engines, the transport
+and the fleet simulator all hold a reference (``NOOP_OBS`` by default —
+everything off, near-zero overhead) and record unconditionally.
+
+``make_obs(trace=..., metrics=..., profile_dir=...)`` builds an enabled
+bundle; ``obs.export(...)`` writes whichever artifacts were requested
+(JSONL trace, Chrome trace, metrics CSV). The profiler hooks are gated:
+if ``jax.profiler`` is unavailable or fails to start (headless builds),
+the run proceeds untraced rather than crashing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs import export as export_mod
+from repro.obs.metrics import NOOP_METRICS, MetricsRegistry
+from repro.obs.trace import NOOP_TRACER, Tracer, is_tracing
+
+
+class Observability:
+    """Tracer + metrics + profiler hooks. Prefer ``make_obs``."""
+
+    def __init__(self, tracer=NOOP_TRACER, metrics=NOOP_METRICS,
+                 profile_dir: Optional[str] = None):
+        self.tracer = tracer
+        self.metrics = metrics
+        self.profile_dir = profile_dir
+        self._profiling = False
+
+    @property
+    def enabled(self) -> bool:
+        return (is_tracing(self.tracer)
+                or isinstance(self.metrics, MetricsRegistry)
+                or self.profile_dir is not None)
+
+    # -- jax.profiler hooks (gated: failure to start is non-fatal) ----------
+    def start_profiler(self):
+        if self.profile_dir is None or self._profiling:
+            return
+        try:
+            import jax
+            jax.profiler.start_trace(self.profile_dir)
+            self._profiling = True
+        except Exception as e:          # pragma: no cover - env dependent
+            print(f"obs: jax.profiler unavailable ({e}); continuing")
+
+    def stop_profiler(self):
+        if not self._profiling:
+            return
+        try:
+            import jax
+            jax.profiler.stop_trace()
+        except Exception as e:          # pragma: no cover - env dependent
+            print(f"obs: jax.profiler stop failed ({e})")
+        self._profiling = False
+
+    # -- artifact export -----------------------------------------------------
+    def export(self, *, trace_jsonl=None, chrome_trace=None,
+               metrics_csv=None, **meta):
+        """Write the requested artifacts; returns {kind: path}."""
+        written = {}
+        if trace_jsonl and is_tracing(self.tracer):
+            written["trace_jsonl"] = export_mod.write_jsonl(
+                self.tracer, trace_jsonl, **meta)
+        if chrome_trace and is_tracing(self.tracer):
+            written["chrome_trace"] = export_mod.write_chrome_trace(
+                self.tracer, chrome_trace, **meta)
+        if metrics_csv and isinstance(self.metrics, MetricsRegistry):
+            written["metrics_csv"] = export_mod.write_metrics_csv(
+                self.metrics, metrics_csv)
+        return written
+
+
+NOOP_OBS = Observability()
+
+
+def make_obs(*, trace: bool = False, metrics: bool = False,
+             profile_dir: Optional[str] = None, clock=None,
+             **meta) -> Observability:
+    """Build an enabled bundle; extra kwargs become trace run metadata."""
+    if trace:
+        tracer = Tracer(clock) if clock is not None else Tracer()
+        tracer.meta.update(meta)
+    else:
+        tracer = NOOP_TRACER
+    return Observability(
+        tracer=tracer,
+        metrics=MetricsRegistry() if metrics else NOOP_METRICS,
+        profile_dir=profile_dir)
