@@ -15,9 +15,13 @@
   simulation heterogeneous-fleet round policies: wall-clock to target
            loss, device-seconds, energy, drops per schedule x fleet x
            policy (writes results/simulation_bench.json)
+  privacy  DP-FedAvg + secure aggregation: utility delta, (eps, delta),
+           wire/mask overhead and rounds/sec per schedule x codec x
+           privacy mode (writes results/privacy_bench.json)
 
-``python -m benchmarks.run`` runs the fast set; ``--full`` adds the
-reduced-scale FL accuracy benchmarks (table4), which train for real.
+``python -m benchmarks.run`` runs the fast set (``--only`` takes a
+comma-separated subset); ``--full`` adds the reduced-scale FL accuracy
+benchmarks (table4), which train for real.
 """
 from __future__ import annotations
 
@@ -493,6 +497,105 @@ def bench_simulation(rounds=6, clients=6, clients_per_round=4,
     return doc
 
 
+def bench_privacy(rounds=4, clients=4, schedules=("e2e", "lw_fedssl"),
+                  codecs=("fp32", "int8", "topk:0.25"), seed=0, write=True):
+    """Privacy: codec x schedule x (DP, secure-agg) cost frontier.
+
+    For every schedule x codec cell, four runs — baseline, client-level
+    DP (clip=1, z=1.1), pairwise-mask secure aggregation, and both —
+    reporting utility delta vs the cell's baseline, the (eps, delta)
+    spent, measured wire MB plus the secure-agg mask overhead, and the
+    steady-state rounds/sec cost. Writes results/privacy_bench.json
+    (validated against benchmarks.schemas) and emits one BENCH json
+    line. Tests call this with smaller knobs and ``write=False``.
+    """
+    print("\n== Privacy: DP / secure-agg utility + overhead frontier ==")
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.schemas import validate_privacy_bench
+    from repro.configs.base import (FLConfig, ModelConfig, SSLConfig,
+                                    TrainConfig)
+    from repro.data import iid_partition, synthetic_images
+    from repro.federated.driver import run_fedssl
+    from repro.privacy import PrivacyConfig
+
+    cfg = ModelConfig("t-vit", "dense", 2, 32, 2, 2, 64, 0, causal=False,
+                      compute_dtype="float32", act="gelu")
+    sslc = SSLConfig(proj_hidden=32, pred_hidden=32, proj_dim=16)
+    tc = TrainConfig(batch_size=8, base_lr=1.5e-4)
+    samples = clients * 2 * tc.batch_size
+    imgs, _ = synthetic_images(jax.random.PRNGKey(seed), samples, 10, 32)
+    idx = [jnp.asarray(i) for i in iid_partition(samples, clients)]
+    modes = (("baseline", None),
+             ("dp", PrivacyConfig(clip=1.0, noise_multiplier=1.1)),
+             ("secure", PrivacyConfig(secure_agg=True)),
+             ("dp+secure", PrivacyConfig(clip=1.0, noise_multiplier=1.1,
+                                         secure_agg=True)))
+    rows = []
+    for schedule in schedules:
+        fl = FLConfig(num_clients=clients, rounds=rounds, local_epochs=1,
+                      schedule=schedule)
+        for codec in codecs:
+            base_loss = base_rps = None
+            for mode, privacy in modes:
+                times = [time.perf_counter()]
+                _, hist = run_fedssl(
+                    cfg, sslc, fl, tc, images=imgs, client_indices=idx,
+                    key=jax.random.PRNGKey(seed), codec=codec,
+                    privacy=privacy, obs=OBS,
+                    log=lambda m: times.append(time.perf_counter()))
+                # steady-state rounds/sec: round 1 pays the XLA compile
+                rps = (rounds - 1) / max(times[-1] - times[1], 1e-9)
+                if mode == "baseline":
+                    base_loss, base_rps = hist.loss[-1], rps
+                dp = privacy is not None and privacy.clip > 0.0
+                rows.append({
+                    "schedule": schedule, "codec": codec, "dp": dp,
+                    "secure_agg": bool(privacy is not None
+                                       and privacy.secure_agg),
+                    "rounds": rounds, "clients": clients,
+                    "final_loss": round(float(hist.loss[-1]), 6),
+                    "utility_delta": round(
+                        float(hist.loss[-1] - base_loss), 6),
+                    "epsilon": (round(float(hist.epsilon[-1]), 6)
+                                if dp else None),
+                    "clip_fraction": (round(float(
+                        np.mean(hist.clip_fraction)), 6) if dp else None),
+                    "wire_mb": round(float(hist.total_wire) / 1e6, 4),
+                    "mask_overhead_mb": round(float(
+                        sum(hist.secure_agg_overhead_bytes)) / 1e6, 4),
+                    "rounds_per_sec": round(rps, 4),
+                    "slowdown": round(base_rps / max(rps, 1e-9), 3),
+                })
+                r = rows[-1]
+                eps = (f"eps {r['epsilon']:7.2f}" if r["epsilon"]
+                       is not None else "eps    -  ")
+                print(f"{schedule:10s} {codec:10s} {mode:10s} "
+                      f"loss {r['final_loss']:7.4f} "
+                      f"(d {r['utility_delta']:+8.4f})  {eps}  "
+                      f"wire {r['wire_mb']:6.2f}MB "
+                      f"+mask {r['mask_overhead_mb']:5.2f}MB  "
+                      f"{r['rounds_per_sec']:5.2f} r/s "
+                      f"({r['slowdown']:.2f}x)")
+    doc = {"bench": "privacy",
+           "config": {"rounds": rounds, "clients": clients, "seed": seed,
+                      "schedules": list(schedules), "codecs": list(codecs),
+                      "modes": [m for m, _ in modes],
+                      "dp_clip": 1.0, "dp_noise_multiplier": 1.1,
+                      "dp_delta": 1e-5, "engine": "sequential"},
+           "rows": rows}
+    errors = validate_privacy_bench(doc)
+    assert not errors, errors
+    if write:
+        RESULTS.mkdir(exist_ok=True)
+        out = RESULTS / "privacy_bench.json"
+        out.write_text(json.dumps(doc, indent=1))
+        print("BENCH " + json.dumps({"bench": "privacy",
+                                     "rows": len(rows)}))
+        print(f"(schema-validated; json -> {out})")
+    return doc
+
+
 def bench_table4(rounds=4):
     print("\n== Table 4: auxiliary data amount (reduced-scale, "
           "synthetic) ==")
@@ -531,15 +634,32 @@ BENCHES = {
     "fig5": bench_fig5, "fig6": bench_fig6, "fig14": bench_fig14,
     "kernels": bench_kernels, "roofline": bench_roofline,
     "engine": bench_engine, "transport": bench_transport,
-    "simulation": bench_simulation,
+    "simulation": bench_simulation, "privacy": bench_privacy,
 }
 FULL_BENCHES = {"table4": bench_table4}
+
+
+def _select_benches(only: str, benches: dict) -> dict:
+    """``--only`` value (comma-separated bench names) -> ordered subset
+    of ``benches``; raises ValueError on unknown or empty names so CI
+    fails loudly instead of silently running nothing."""
+    names = [n.strip() for n in only.split(",") if n.strip()]
+    if not names:
+        raise ValueError("--only: no bench names given")
+    unknown = [n for n in names if n not in benches]
+    if unknown:
+        raise ValueError(
+            f"--only: unknown bench(es) {', '.join(unknown)}; "
+            f"available: {', '.join(sorted(benches))}")
+    return {n: benches[n] for n in names}
 
 
 def main():
     global OBS
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run only these benches (comma-separated, e.g. "
+                         "--only transport,privacy)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--trace", action="store_true",
                     help="span-trace the bench run (one span per bench, "
@@ -553,7 +673,10 @@ def main():
     if args.full:
         todo.update(FULL_BENCHES)
     if args.only:
-        todo = {args.only: {**BENCHES, **FULL_BENCHES}[args.only]}
+        try:
+            todo = _select_benches(args.only, {**BENCHES, **FULL_BENCHES})
+        except ValueError as e:
+            ap.error(str(e))
     t0 = time.perf_counter()
     for name, fn in todo.items():
         with OBS.tracer.span(f"bench.{name}", cat="bench"):

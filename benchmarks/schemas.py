@@ -8,10 +8,12 @@ definition here. The validators return a list of human-readable problems
 (empty = valid) instead of raising, so callers can report every issue at
 once.
 
-Four document families are covered: the fleet-simulation bench
+Five document families are covered: the fleet-simulation bench
 (``validate_simulation_bench``), the wire-transport bench
 (``validate_transport_bench`` — per-schedule pack/unpack throughput for
-both wire engines plus one codec-throughput row per codec), and the two
+both wire engines plus one codec-throughput row per codec), the privacy
+bench (``validate_privacy_bench`` — DP/secure-agg utility and overhead
+per schedule x codec x mode), and the two
 observability exports from ``repro.obs`` — the JSONL span stream
 (``validate_trace_jsonl``) and the Chrome ``trace_event`` document
 (``validate_chrome_trace``) that Perfetto / chrome://tracing loads —
@@ -200,6 +202,61 @@ def validate_transport_bench(doc: Any) -> List[str]:
             for f in ("encode_gbps", "decode_gbps"):
                 _check_engine_map(f"codec_rows[{i}].{f}", row.get(f),
                                   errors)
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# privacy bench
+# ---------------------------------------------------------------------------
+# one row per schedule x codec x privacy mode: utility delta vs the
+# unprotected baseline, wire cost (codec wire + secure-agg mask overhead)
+# and throughput cost. ``epsilon``/``clip_fraction`` are None for modes
+# without DP (baseline / secure-agg only).
+PRIVACY_ROW_SCHEMA: Dict[str, Any] = {
+    "schedule": str,
+    "codec": str,
+    "dp": bool,
+    "secure_agg": bool,
+    "rounds": int,
+    "clients": int,
+    "final_loss": float,
+    "utility_delta": float,
+    "epsilon": (float, type(None)),
+    "clip_fraction": (float, type(None)),
+    "wire_mb": float,
+    "mask_overhead_mb": float,
+    "rounds_per_sec": float,
+    "slowdown": float,
+}
+
+PRIVACY_TOP_KEYS = ("bench", "config", "rows")
+
+
+def validate_privacy_bench(doc: Any) -> List[str]:
+    """Validate a privacy-bench document; returns a list of problems."""
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"top level: expected object, got {type(doc).__name__}"]
+    for k in PRIVACY_TOP_KEYS:
+        if k not in doc:
+            errors.append(f"top level: missing key '{k}'")
+    if doc.get("bench") != "privacy":
+        errors.append(f"bench: expected 'privacy', "
+                      f"got {doc.get('bench')!r}")
+    rows = doc.get("rows", [])
+    if not isinstance(rows, list) or not rows:
+        errors.append("rows: expected a non-empty list")
+        return errors
+    for i, row in enumerate(rows):
+        _check_fields(f"rows[{i}]", row, PRIVACY_ROW_SCHEMA, errors)
+        if isinstance(row, dict):
+            # DP rows must report their accounting; non-DP rows must not
+            # fabricate one
+            if row.get("dp") is True and row.get("epsilon") is None:
+                errors.append(f"rows[{i}].epsilon: required when dp=true")
+            if row.get("dp") is False and row.get("epsilon") is not None:
+                errors.append(f"rows[{i}].epsilon: must be null when "
+                              f"dp=false")
     return errors
 
 

@@ -21,6 +21,15 @@ counts (``comm.round_comm_bytes``) and the measured wire bytes; with the
 fp32 identity codec the two are equal and training is bit-identical to
 handing pytrees around directly.
 
+Privacy (``repro.privacy``, off by default): pass ``privacy=
+PrivacyConfig(...)`` for client-level DP-FedAvg — per-client update
+clipping inside both engines' wire paths, one calibrated Gaussian draw on
+the aggregate, RDP accounting into ``FLHistory.epsilon`` with an optional
+hard ``epsilon_budget`` stop — and/or pairwise-mask secure aggregation,
+which replaces the float FedAvg with a masked fixed-point sum at the
+aggregation boundary (composing with every codec, schedule, engine and
+round policy). See docs/privacy.md.
+
 Observability (``repro.obs``, off by default): pass ``obs=make_obs(...)``
 and every round becomes a span tree — ``run > round > {download,
 local_train, calibrate}`` with engine/transport child spans — annotated
@@ -41,17 +50,23 @@ from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import schedule as sched
 from repro.core import ssl as ssl_mod
-from repro.federated import comm, server
+from repro.federated import aggregate, comm, server
 from repro.federated import engine as engine_mod
 from repro.federated import transport as transport_mod
 from repro.obs import NOOP_OBS, format_round_line
+from repro.privacy import PrivacyEngine, make_privacy
 from repro.optim import make_optimizer
 from repro.optim.schedules import learning_rate, scaled_base_lr
 
-HISTORY_VERSION = 1
+# v2 added the privacy fields (epsilon / clip_fraction /
+# secure_agg_overhead_bytes); v1 dicts still load, the new fields default
+# to empty lists
+HISTORY_VERSION = 2
+_COMPAT_VERSIONS = (1, 2)
 
 
 @dataclass
@@ -72,6 +87,13 @@ class FLHistory:
     energy_joules: List[float] = field(default_factory=list)
     dropped_clients: List[int] = field(default_factory=list)
     participants: List[tuple] = field(default_factory=list)
+    # privacy accounting (populated only when run_fedssl gets privacy=...;
+    # empty lists otherwise): cumulative (ε, δ) after each round, fraction
+    # of participants whose update was clipped, per-client secure-agg wire
+    # overhead in bytes
+    epsilon: List[float] = field(default_factory=list)
+    clip_fraction: List[float] = field(default_factory=list)
+    secure_agg_overhead_bytes: List[int] = field(default_factory=list)
 
     @property
     def total_comm(self) -> int:
@@ -128,10 +150,10 @@ class FLHistory:
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "FLHistory":
-        if d.get("version") != HISTORY_VERSION:
+        if d.get("version") not in _COMPAT_VERSIONS:
             raise ValueError(f"unsupported FLHistory version "
                              f"{d.get('version')!r} "
-                             f"(have {HISTORY_VERSION})")
+                             f"(have {_COMPAT_VERSIONS})")
         known = {f.name for f in dataclasses.fields(cls)}
         kw = {}
         for name, vals in d.get("fields", {}).items():
@@ -146,7 +168,7 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                aux_images=None, key=None, encoder=None, image_size: int = 32,
                log=None, engine: str = "sequential",
                codec: str = "fp32", transport_kernels: str = "xla",
-               sim=None, obs=None) -> tuple:
+               sim=None, obs=None, privacy=None) -> tuple:
     """Run the FL process; returns (final_state, FLHistory).
 
     images: (n, H, W, 3) pooled training pool; client_indices: list of index
@@ -162,11 +184,19 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
     policies change who trains and how updates aggregate, and ``FLHistory``
     gains per-round wall-clock / device-seconds / energy / drop counts;
     obs: optional ``repro.obs.Observability`` (spans, metrics, profiler).
-    Defaults to the no-op bundle — tracing never changes training numerics.
+    Defaults to the no-op bundle — tracing never changes training numerics;
+    privacy: optional ``repro.privacy.PrivacyConfig`` (or an existing
+    ``PrivacyEngine``) — client-level DP-FedAvg clipping/noise, RDP
+    accounting into ``FLHistory.epsilon`` (``--dp-epsilon-budget`` halts
+    training when exceeded) and pairwise-mask secure aggregation. The
+    privacy RNG is a dedicated stream folded off the run key, so DP-off
+    runs are byte-identical to passing ``privacy=None``.
     """
     obs = obs if obs is not None else NOOP_OBS
     tracer, met = obs.tracer, obs.metrics
     key = key if key is not None else jax.random.PRNGKey(fl.seed)
+    prv = make_privacy(privacy)
+    k_privacy = PrivacyEngine.fork_stream(key) if prv is not None else None
     if encoder is None:
         encoder = ssl_mod.make_vit_encoder(model_cfg, image_size)
     k_init, key = jax.random.split(key)
@@ -176,8 +206,10 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
     base_lr = scaled_base_lr(train_cfg.base_lr, train_cfg.batch_size)
     hist = FLHistory()
 
+    counts = [len(ix) for ix in client_indices]
     wire = transport_mod.Transport(codec, include_heads=fl.include_heads,
-                                   kernels=transport_kernels, obs=obs)
+                                   kernels=transport_kernels, obs=obs,
+                                   privacy=prv)
     eng = engine_mod.make_engine(
         engine, encoder=encoder, ssl_cfg=ssl_cfg, opt=opt, fl=fl,
         train_cfg=train_cfg, images=images, client_indices=client_indices,
@@ -248,15 +280,21 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                                            dstate["online"]["enc"])
                               if plan.align else None)
                 outcome = None
+                up_spec = (wire.plan_specs(state["online"], plan)["upload"]
+                           if (sim is not None or prv is not None) else None)
                 if sim is not None:
-                    up_spec = wire.plan_specs(state["online"],
-                                              plan)["upload"]
                     outcome = sim.begin_round(
                         plan, cohort, down_bytes=down["wire_bytes"],
                         up_bytes=wire.upload_stats(up_spec)["wire_bytes"])
                     participants = list(outcome.train_ids)
                 else:
                     participants = cohort
+                # privacy RNG: dedicated stream, folded per round — never
+                # touches the main chain split above/below
+                if prv is not None:
+                    k_noise, mask_seed = PrivacyEngine.round_keys(
+                        k_privacy, plan.round_idx)
+                secure = prv is not None and prv.cfg.secure_agg
                 # per-participant keys are split here, identically for
                 # both engines, so the main RNG chain (and the calibration
                 # key below) is engine-independent
@@ -270,7 +308,9 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                     # buffered-async: the engine returns per-client decoded
                     # trees; the policy buffers them and aggregates
                     # arrivals staleness-weighted (possibly rounds after
-                    # they trained)
+                    # they trained). Secure aggregation injects its masked
+                    # FedAvg into the buffer flush (masks derived over each
+                    # flush's arrival set — survivor-set re-masking).
                     with train_span:
                         if participants:
                             trees, losses, up = eng.run_round(
@@ -281,8 +321,29 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                         else:  # every sampled candidate was busy/offline
                             trees, losses = [], []
                             up = wire.upload_stats(up_spec)
-                    new_online, outcome = sim.complete_round_async(outcome,
-                                                                   trees)
+                    new_online, outcome = sim.complete_round_async(
+                        outcome, trees,
+                        agg_fn=prv.make_secure_agg_fn(
+                            wire, up_spec, state["online"], mask_seed)
+                        if secure else None)
+                elif secure:
+                    # synchronous/deadline secure round: collect decoded
+                    # per-client trees, FedAvg through the masked
+                    # fixed-point pipeline instead of the engine's fused
+                    # float aggregation
+                    with train_span:
+                        trees, losses, up = eng.run_round(
+                            dstate, plan, participants, client_keys, lr,
+                            global_enc, server_online=state["online"],
+                            collect=True)
+                    w = aggregate.client_weights(
+                        [counts[i] for i in participants])
+                    new_online = prv.secure_fedavg(
+                        trees, np.asarray(w), participants, spec=up_spec,
+                        transport=wire, base=state["online"],
+                        seed=mask_seed)
+                    if sim is not None:
+                        outcome = sim.complete_round(outcome)
                 else:
                     with train_span:
                         new_online, losses, up = eng.run_round(
@@ -290,6 +351,21 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                             global_enc, server_online=state["online"])
                     if sim is not None:
                         outcome = sim.complete_round(outcome)
+                if prv is not None and prv.noise_enabled:
+                    # one server-side Gaussian draw on the aggregated
+                    # payload, σ = z·C·max_w (sensitivity of the weighted
+                    # mean); the async policy reports its staleness
+                    # weights, every other path is sample-count FedAvg
+                    if outcome is not None and outcome.weights:
+                        max_w = max(outcome.weights)
+                    else:
+                        agg_ids = (list(outcome.aggregated)
+                                   if outcome is not None else participants)
+                        max_w = float(np.max(np.asarray(
+                            aggregate.client_weights(
+                                [counts[i] for i in agg_ids]))))
+                    new_online = prv.add_noise(new_online, up_spec, wire,
+                                               k_noise, prv.sigma(max_w))
                 state = {**state, "online": new_online}
                 if plan.server_calibrate and aux_images is not None:
                     key, kg = jax.random.split(key)
@@ -320,6 +396,21 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                     hist.participants.append(tuple(participants))
                     sim_log = (f" sim {outcome.wall_clock_s:.1f}s "
                                f"dropped {len(outcome.dropped)}")
+                eps = None
+                if prv is not None:
+                    # account the *sampled* cohort (Poisson-style q =
+                    # cohort / population), not the survivor set — dropped
+                    # clients were still contacted
+                    prv.accountant.observe_round(
+                        len(cohort) / max(1, fl.num_clients))
+                    eps = float(prv.accountant.epsilon(prv.cfg.delta))
+                    hist.epsilon.append(eps)
+                    hist.clip_fraction.append(
+                        float(up.get("clip_fraction", 0.0)))
+                    hist.secure_agg_overhead_bytes.append(
+                        prv.secure_overhead_bytes(up_spec,
+                                                  wire.wire_bytes(up_spec)))
+                    sim_log += (f" eps {eps:.3g}" if prv.dp else "")
                 round_span.set(
                     loss=hist.loss[-1], lr=lr,
                     download_bytes=cb["download"],
@@ -328,6 +419,12 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                     wire_upload_bytes=up["wire_bytes"],
                     participants=len(participants),
                     dropped=len(outcome.dropped) if outcome else 0)
+                if prv is not None:
+                    round_span.set(
+                        epsilon=eps,
+                        clip_fraction=hist.clip_fraction[-1],
+                        secure_agg_overhead_bytes=hist
+                        .secure_agg_overhead_bytes[-1])
             if obs.enabled:
                 met.counter("fl.rounds").inc()
                 met.counter("comm.download_bytes").inc(cb["download"])
@@ -343,6 +440,12 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                     met.counter("sim.energy_j").inc(outcome.energy_j)
                     met.counter("sim.dropped_clients").inc(
                         len(outcome.dropped))
+                if prv is not None:
+                    met.gauge("privacy.epsilon").set(eps)
+                    met.histogram("privacy.clip_fraction").observe(
+                        hist.clip_fraction[-1])
+                    met.counter("privacy.secure_agg_overhead_bytes").inc(
+                        hist.secure_agg_overhead_bytes[-1])
                 entries = (eng.compile_cache_size()
                            + wire.compile_cache_size())
                 if entries > jit_entries:
@@ -356,6 +459,16 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                     up_mb=cb["upload"] / 1e6,
                     wire_mb=(down["wire_bytes"] + up["wire_bytes"]) / 1e6,
                     extra=sim_log))
+            if (prv is not None and prv.cfg.epsilon_budget > 0.0
+                    and eps > prv.cfg.epsilon_budget):
+                tracer.instant("privacy.budget_exhausted", cat="fl",
+                               round=plan.round_idx, epsilon=eps,
+                               budget=prv.cfg.epsilon_budget)
+                if log:
+                    log(f"privacy budget exhausted: eps {eps:.4g} > "
+                        f"{prv.cfg.epsilon_budget:.4g} after round "
+                        f"{plan.round_idx + 1}/{fl.rounds}; halting")
+                break
     if obs.enabled:
         met.gauge("wire.compression_ratio").set(hist.compression_ratio)
     obs.stop_profiler()

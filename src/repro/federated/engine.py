@@ -80,7 +80,8 @@ def build_round_program(client_init, client_step, extract,
     client_step(carry, batch, key, lr, broadcast) -> (carry, loss)
     extract(carry) -> pytree to aggregate
     wire_transform(stacked_outs, broadcast, residuals)
-        -> (decoded_stacked, new_residuals)  (optional transport hook)
+        -> (decoded_stacked, new_residuals, clip_scales)
+                                             (optional transport hook)
     fedavg=False skips the fused aggregation and returns the (decoded)
     client-stacked trees instead — the buffered-async round policy holds
     individual updates across rounds and averages them itself.
@@ -91,8 +92,10 @@ def build_round_program(client_init, client_step, extract,
           -> (aggregated_tree, (C,) last-step losses)
 
     or, when ``wire_transform`` is given, an extra trailing ``residuals``
-    argument and result: each client's extracted tree is packed onto the
-    wire, encoded/decoded by the transport codec (threading per-client
+    argument plus two extra results (new residuals and the (C,) DP clip
+    scales): each client's extracted tree is packed onto the wire,
+    DP-clipped when the transport carries a privacy engine,
+    encoded/decoded by the transport codec (threading per-client
     error-feedback residuals through the program), and FedAvg consumes the
     *decoded* trees — the codec's quantization/sparsification error
     propagates into the aggregated model exactly as it would in a real
@@ -135,11 +138,12 @@ def build_round_program(client_init, client_step, extract,
                      weights, lr, residuals):
             outs, losses = run_clients(broadcast, shards, batch_idx,
                                        step_keys, valid, lr)
-            decoded, new_res = wire_transform(outs, broadcast, residuals)
+            decoded, new_res, scales = wire_transform(outs, broadcast,
+                                                      residuals)
             if not fedavg:
-                return decoded, losses, new_res
+                return decoded, losses, new_res, scales
             return (aggregate.fedavg_stacked(decoded, weights), losses,
-                    new_res)
+                    new_res, scales)
 
     return jax.jit(round_fn)
 
@@ -307,7 +311,7 @@ class VmapEngine:
                                   engine=self.name,
                                   participants=len(participants),
                                   programs=len(self._programs)):
-            result, losses, new_res = self._program(
+            result, losses, new_res, scales = self._program(
                 plan, spec, fedavg=not collect)(
                 {"state": state, "global_enc": global_enc,
                  "server": server_online}, shards,
@@ -320,8 +324,10 @@ class VmapEngine:
             # async policy holds them individually across rounds)
             result = [jax.tree.map(lambda a, i=i: a[i], result)
                       for i in range(len(participants))]
-        return (result, [float(x) for x in np.asarray(losses)],
-                self.transport.upload_stats(spec))
+        stats = dict(self.transport.upload_stats(spec))
+        stats["clip_fraction"] = float(
+            np.mean(np.asarray(scales, np.float32) < 1.0))
+        return result, [float(x) for x in np.asarray(losses)], stats
 
 
 def make_engine(name: str, **kw):

@@ -437,13 +437,17 @@ class Transport:
     the driver folds into ``FLHistory``."""
 
     def __init__(self, codec="fp32", *, include_heads: bool = True,
-                 kernels: str = "xla", obs=None):
+                 kernels: str = "xla", obs=None, privacy=None):
         if kernels not in TRANSPORT_KERNELS:
             raise ValueError(f"unknown transport kernels '{kernels}'; "
                              f"one of {TRANSPORT_KERNELS}")
         self.codec = make_codec(codec) if isinstance(codec, str) else codec
         self.include_heads = include_heads
         self.kernels = kernels
+        # optional repro.privacy.PrivacyEngine: when clipping is on, every
+        # upload's payload update is global-norm clipped before the codec
+        # (DP-FedAvg step 1) on both wire engines
+        self.privacy = privacy
         self.obs = obs if obs is not None else NOOP_OBS
         self._specs: Dict[Tuple, PayloadSpec] = {}
         self._wire_bytes: Dict[Tuple, int] = {}
@@ -488,26 +492,33 @@ class Transport:
 
     # -- the wire round-trip ------------------------------------------------
     def _upload_one(self, out, base, ref_flat, res, spec: PayloadSpec):
-        """One client's upload path, pure JAX: pack ``out``, subtract the
-        shared reference for delta codecs, add the client's error-feedback
-        residual, encode/decode, and scatter the reconstructed payload into
-        ``base`` (the server's tree). Returns (decoded tree, new residual).
+        """One client's upload path, pure JAX: pack ``out``, DP-clip the
+        update against the shared reference when privacy is on, subtract
+        the reference for delta codecs, add the client's error-feedback
+        residual, encode/decode, and scatter the reconstructed payload
+        into ``base`` (the server's tree). Returns (decoded tree, new
+        residual, clip scale) — scale is 1.0 whenever nothing was clipped.
         """
         codec = self.codec
         flat = pack_stage_payload(out, spec)
+        if self.privacy is not None and self.privacy.dp:
+            flat, scale = self.privacy.clip_jax(flat, ref_flat)
+        else:
+            scale = jnp.float32(1.0)
         x = flat - ref_flat if codec.delta else flat
         if codec.error_feedback:
             x = x + res
         dec = codec.decode(codec.encode(x, spec), spec)
         new_res = x - dec if codec.error_feedback else res
         full = ref_flat + dec if codec.delta else dec
-        return unpack_stage_payload(base, full, spec), new_res
+        return unpack_stage_payload(base, full, spec), new_res, scale
 
     def _upload_fn(self, spec: PayloadSpec):
-        """(base, ref_flat, src, residual) -> (decoded tree, new residual)
-        for the sequential engine's per-client loop; the shared reference
-        is packed once per round, not once per client. jit'd XLA in
-        ``kernels="xla"`` mode, the fused kernel wire path in ``pallas``.
+        """(base, ref_flat, src, residual) -> (decoded tree, new residual,
+        clip scale) for the sequential engine's per-client loop; the
+        shared reference is packed once per round, not once per client.
+        jit'd XLA in ``kernels="xla"`` mode, the fused kernel wire path in
+        ``pallas``.
         """
         key = ("up", spec.sig)
         if key not in self._roundtrips:
@@ -538,29 +549,40 @@ class Transport:
 
     def _kernel_upload_fn(self, spec: PayloadSpec):
         codec = self.codec
+        privacy = self.privacy
+
+        def clip(flat, ref_flat):
+            # host-side mirror of the in-jit clip; pass-through (scale
+            # 1.0) hands the pooled wire buffer back untouched
+            if privacy is not None and privacy.dp:
+                return privacy.clip_host(flat, ref_flat)
+            return flat, np.float32(1.0)
+
         if codec.delta:
             assert isinstance(codec, TopKCodec), codec.name
             k = codec.k_for(spec)
 
             def fn(base, ref_flat, src, res):
-                flat = kernel_pack(src, spec)
+                flat, scale = clip(kernel_pack(src, spec), ref_flat)
                 idx, val, new_res = kops.wire_topk_encode_ef(
                     flat, ref_flat, res, k)
                 full = _sparse_add(ref_flat, idx, val, spec.total)
-                return kernel_unpack(base, full, spec), new_res
+                return kernel_unpack(base, full, spec), new_res, scale
         else:
             roundtrip = self._kernel_roundtrip(spec)
 
             def fn(base, ref_flat, src, res):
-                dec = roundtrip(kernel_pack(src, spec))
-                return kernel_unpack(base, dec, spec), res
+                flat, scale = clip(kernel_pack(src, spec), ref_flat)
+                dec = roundtrip(flat)
+                return kernel_unpack(base, dec, spec), res, scale
         return fn
 
     def make_wire_transform(self, spec: PayloadSpec):
         """Pure function for the vectorized engine: (client-stacked trees,
         unbatched server base tree, unbatched download-reference tree,
-        (C, n) residuals) -> (decoded stacked trees, new residuals).
-        vmap-ed over clients inside the jit'd round."""
+        (C, n) residuals) -> (decoded stacked trees, new residuals, (C,)
+        clip scales). vmap-ed over clients inside the jit'd round — DP
+        clipping included, so both engines clip with the same function."""
         def transform(stacked_outs, base, ref, residuals):
             ref_flat = pack_stage_payload(ref, spec)
             return jax.vmap(
@@ -703,7 +725,7 @@ class Transport:
                          payload_bytes=spec.payload_bytes):
             ref_flat = self._pack_fn(spec)(ref_online)
             res = self.gather_residuals(client_ids, spec)
-            trees, new_res = [], []
+            trees, new_res, scales = [], [], []
             for cid, out, r in zip(client_ids, outs, res):
                 # client ids are ints in the driver but any hashable in
                 # direct Transport use — keep strings as-is in the span
@@ -711,11 +733,15 @@ class Transport:
                                  client=cid if isinstance(cid, str)
                                  else int(cid),
                                  codec=self.codec.name):
-                    tree, nr = fn(server_online, ref_flat, out, r)
+                    tree, nr, sc = fn(server_online, ref_flat, out, r)
                 trees.append(tree)
                 new_res.append(nr)
+                scales.append(sc)
             self.store_residuals(client_ids, spec, new_res)
-        return trees, self.upload_stats(spec)
+        stats = dict(self.upload_stats(spec))
+        stats["clip_fraction"] = float(
+            np.mean(np.asarray(scales, np.float32) < 1.0))
+        return trees, stats
 
     def aggregate_uploads(self, server_online, outs, client_ids, plan,
                           weights, ref_online=None):

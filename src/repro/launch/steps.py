@@ -165,7 +165,8 @@ def make_decode_step(cfg):
 # ---------------------------------------------------------------------------
 def make_fl_round_program(cfg, train_cfg, *, mode: str = "train",
                           sub_layers: int = None, active_from: int = None,
-                          align: bool = None, wire_transform=None):
+                          align: bool = None, wire_transform=None,
+                          fedavg: bool = True):
     """One jit'd program for an entire LM FL round: every sampled client's
     local steps run as a ``lax.scan`` vmapped over the client axis, with
     FedAvg fused at the end (``repro.federated.engine`` semantics).
@@ -181,9 +182,13 @@ def make_fl_round_program(cfg, train_cfg, *, mode: str = "train",
     is live — each round can pass its scheduled learning rate.
 
     ``wire_transform`` (optional) is the transport hook forwarded to
-    ``build_round_program``: client results are wire-encoded/decoded before
-    the fused FedAvg, the program takes a trailing ``residuals`` argument
-    and returns updated residuals (see ``repro.federated.transport``).
+    ``build_round_program``: client results are wire-encoded/decoded
+    (DP-clipped first when the transport carries a privacy engine) before
+    the fused FedAvg, and the program takes a trailing ``residuals``
+    argument and returns updated residuals plus per-client clip scales
+    (see ``repro.federated.transport``). ``fedavg=False`` returns the
+    decoded client-stacked trees instead of their FedAvg — secure
+    aggregation masks and averages them outside the program.
     """
     from repro.federated.engine import build_round_program
 
@@ -222,4 +227,5 @@ def make_fl_round_program(cfg, train_cfg, *, mode: str = "train",
         return (p, o), m["loss"]
 
     return build_round_program(client_init, client_step, lambda c: c[0],
-                               wire_transform=wire_transform), opt
+                               wire_transform=wire_transform,
+                               fedavg=fedavg), opt

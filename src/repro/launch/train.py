@@ -22,6 +22,11 @@ engine (``--transport-kernels``: xla | pallas — the latter is the fused
 pack/codec kernel path, docs/kernels.md); see docs/transport.md for
 payload layout and codec semantics.
 
+Privacy (both modes): ``--dp-clip / --dp-noise-multiplier / --dp-delta /
+--dp-epsilon-budget`` enable client-level DP-FedAvg with RDP accounting,
+``--secure-agg`` swaps FedAvg for pairwise-mask fixed-point secure
+aggregation; see docs/privacy.md.
+
 Example:
   PYTHONPATH=src python -m repro.launch.train --mode vit \
       --schedule lw_fedssl --rounds 12 --clients 4 --batch 64 \
@@ -54,6 +59,18 @@ from repro.obs import (ConsoleRenderer, format_round_line, make_obs,
                        write_history_json)
 from repro.optim import make_optimizer
 from repro.optim.schedules import learning_rate, scaled_base_lr
+from repro.privacy import PrivacyConfig, PrivacyEngine, make_privacy
+
+
+def privacy_from_args(args):
+    """PrivacyConfig from --dp-*/--secure-agg; None with everything off."""
+    if (args.dp_clip == 0.0 and args.dp_noise_multiplier == 0.0
+            and not args.secure_agg):
+        return None
+    return PrivacyConfig(
+        clip=args.dp_clip, noise_multiplier=args.dp_noise_multiplier,
+        delta=args.dp_delta, epsilon_budget=args.dp_epsilon_budget,
+        secure_agg=args.secure_agg)
 
 
 def obs_from_args(args, mode):
@@ -110,12 +127,19 @@ def train_vit(args):
             cfg, ssl_cfg, fl, tc, images=images,
             client_indices=[jnp.asarray(i) for i in idx], aux_images=aux,
             key=key, log=log, engine=args.engine, codec=args.codec,
-            transport_kernels=args.transport_kernels, sim=sim, obs=obs)
+            transport_kernels=args.transport_kernels, sim=sim, obs=obs,
+            privacy=privacy_from_args(args))
     export_obs(obs, args, hist=hist)
     print(f"training done in {time.time() - t0:.1f}s; "
           f"total comm {hist.total_comm / 1e6:.2f} MB analytic, "
           f"{hist.total_wire / 1e6:.2f} MB on the wire "
           f"({args.codec}: {hist.compression_ratio:.2f}x)")
+    if hist.epsilon:
+        print(f"privacy: eps {hist.epsilon[-1]:.4g} at delta "
+              f"{args.dp_delta:g} after {len(hist.epsilon)} rounds; "
+              f"mean clip fraction {np.mean(hist.clip_fraction):.2f}; "
+              f"secure-agg overhead "
+              f"{sum(hist.secure_agg_overhead_bytes) / 1e6:.2f} MB/client")
     if sim is not None:
         print(f"simulated fleet '{args.fleet}' / policy "
               f"'{args.round_policy}': {hist.total_wall_clock:.1f}s "
@@ -138,6 +162,10 @@ def train_lm(args):
     from repro.models import lm as lm_mod
 
     key = jax.random.PRNGKey(args.seed)
+    prv = make_privacy(privacy_from_args(args))
+    # dedicated privacy stream: fold_in leaves the main chain untouched,
+    # so DP-off runs are byte-identical to pre-privacy behavior
+    k_priv = PrivacyEngine.fork_stream(key) if prv is not None else None
     cfg = reduced(load_arch(args.arch))
     S = lm_mod.num_stages(cfg)
     fl = FLConfig(num_clients=args.clients, rounds=args.rounds,
@@ -183,8 +211,10 @@ def train_lm(args):
     use_vmap = args.engine == "vmap"
     obs = obs_from_args(args, "lm")
     wire = transport_mod.Transport(args.codec,
-                                   kernels=args.transport_kernels, obs=obs)
+                                   kernels=args.transport_kernels, obs=obs,
+                                   privacy=prv)
     all_clients = list(range(fl.num_clients))
+    secure = prv is not None and prv.cfg.secure_agg
     if use_vmap:
         from repro.data.partition import stack_shards
         from repro.launch.steps import make_fl_round_program
@@ -207,15 +237,17 @@ def train_lm(args):
         step_keys = jnp.zeros((fl.num_clients, T, 2), jnp.uint32)
         round_cache = {}
 
-        def get_round(plan, spec):
-            sig = (plan.sub_layers, plan.active_from, plan.align, spec.sig)
+        def get_round(plan, spec, fedavg=True):
+            sig = (plan.sub_layers, plan.active_from, plan.align, spec.sig,
+                   fedavg)
             if sig not in round_cache:
                 wt = wire.make_wire_transform(spec)
                 round_cache[sig] = make_fl_round_program(
                     cfg, tc, sub_layers=plan.sub_layers,
                     active_from=plan.active_from, align=plan.align,
                     wire_transform=lambda outs, bc, res: wt(
-                        outs, bc["server"], bc["params"], res))[0]
+                        outs, bc["server"], bc["params"], res),
+                    fedavg=fedavg)[0]
             return round_cache[sig]
 
     hist = []
@@ -244,19 +276,35 @@ def train_lm(args):
                 train_span = tracer.span("local_train", cat="fl",
                                          engine=args.engine,
                                          clients=fl.num_clients)
+                spec = (wire.plan_specs(params, plan)["upload"]
+                        if (use_vmap or prv is not None) else None)
+                if prv is not None:
+                    k_noise, mask_seed = PrivacyEngine.round_keys(
+                        k_priv, plan.round_idx)
                 if use_vmap:
-                    spec = wire.plan_specs(params, plan)["upload"]
-                    up = wire.upload_stats(spec)
+                    up = dict(wire.upload_stats(spec))
                     res = wire.gather_residuals(all_clients, spec)
                     with train_span:
-                        new_params, lvec, new_res = get_round(plan, spec)(
+                        result, lvec, new_res, scales = get_round(
+                            plan, spec, fedavg=not secure)(
                             {"params": dparams,
                              "global_params": global_params,
                              "server": params},
                             stacked, batch_idx, step_keys, valid, w,
                             jnp.float32(lr), res)
                     wire.store_residuals(all_clients, spec, new_res)
-                    params = new_params
+                    if secure:
+                        # unstack the decoded client axis and FedAvg
+                        # through the masked fixed-point pipeline
+                        trees = [jax.tree.map(lambda a, i=i: a[i], result)
+                                 for i in range(fl.num_clients)]
+                        params = prv.secure_fedavg(
+                            trees, np.asarray(w), all_clients, spec=spec,
+                            transport=wire, base=params, seed=mask_seed)
+                    else:
+                        params = result
+                    up["clip_fraction"] = float(
+                        np.mean(np.asarray(scales, np.float32) < 1.0))
                     losses = [float(x) for x in np.asarray(lvec)]
                 else:
                     step = get_step(plan)
@@ -276,9 +324,26 @@ def train_lm(args):
                                                    jnp.float32(lr))
                             outs.append(p_i)
                             losses.append(float(m["loss"]))
-                    params, up = wire.aggregate_uploads(
-                        params, outs, all_clients, plan, w,
-                        ref_online=dparams)
+                    if secure:
+                        trees, up = wire.decode_uploads(
+                            params, outs, all_clients, plan,
+                            ref_online=dparams)
+                        params = prv.secure_fedavg(
+                            trees, np.asarray(w), all_clients, spec=spec,
+                            transport=wire, base=params, seed=mask_seed)
+                    else:
+                        params, up = wire.aggregate_uploads(
+                            params, outs, all_clients, plan, w,
+                            ref_online=dparams)
+                eps = None
+                if prv is not None:
+                    if prv.noise_enabled:
+                        params = prv.add_noise(
+                            params, spec, wire, k_noise,
+                            prv.sigma(float(np.max(np.asarray(w)))))
+                    # full participation every round: q = 1
+                    prv.accountant.observe_round(1.0)
+                    eps = float(prv.accountant.epsilon(prv.cfg.delta))
                 wire_mb += (down["wire_bytes"] + up["wire_bytes"]) / 1e6
                 hist.append(sum(losses) / len(losses))
                 cb = comm.round_comm_bytes(params, plan)
@@ -287,6 +352,12 @@ def train_lm(args):
                                upload_bytes=cb["upload"],
                                wire_download_bytes=down["wire_bytes"],
                                wire_upload_bytes=up["wire_bytes"])
+                if prv is not None:
+                    round_span.set(
+                        epsilon=eps,
+                        clip_fraction=float(up.get("clip_fraction", 0.0)),
+                        secure_agg_overhead_bytes=prv.secure_overhead_bytes(
+                            spec, wire.wire_bytes(spec)))
             if obs.enabled:
                 met = obs.metrics
                 met.counter("fl.rounds").inc()
@@ -299,12 +370,23 @@ def train_lm(args):
                     time.perf_counter() - t_round)
             log(format_round_line(
                 plan.round_idx, fl.rounds, plan.stage, hist[-1], lr=lr,
-                wire_mb=(down["wire_bytes"] + up["wire_bytes"]) / 1e6))
+                wire_mb=(down["wire_bytes"] + up["wire_bytes"]) / 1e6,
+                extra=f" eps {eps:.3g}" if prv is not None
+                and prv.dp else ""))
+            if (prv is not None and prv.cfg.epsilon_budget > 0.0
+                    and eps > prv.cfg.epsilon_budget):
+                log(f"privacy budget exhausted: eps {eps:.4g} > "
+                    f"{prv.cfg.epsilon_budget:.4g} after round "
+                    f"{plan.round_idx + 1}/{fl.rounds}; halting")
+                break
     obs.stop_profiler()
     log.close()
     export_obs(obs, args)
     print(f"final loss {hist[-1]:.4f} (start {hist[0]:.4f}); "
           f"{wire_mb:.2f} MB/client on the wire ({args.codec})")
+    if prv is not None and prv.dp:
+        print(f"privacy: eps {eps:.4g} at delta {prv.cfg.delta:g} "
+              f"after {len(hist)} rounds")
     return params, hist
 
 
@@ -370,6 +452,23 @@ def main():
     ap.add_argument("--staleness-alpha", type=float, default=0.5,
                     help="buffered-async: (1+staleness)^-alpha weight "
                          "discount")
+    ap.add_argument("--dp-clip", type=float, default=0.0,
+                    help="client-level DP: L2 clip on each client's "
+                         "stage-payload update (0 = off; 'inf' runs the "
+                         "clipping machinery as an exact pass-through)")
+    ap.add_argument("--dp-noise-multiplier", type=float, default=0.0,
+                    help="client-level DP: noise multiplier z — server "
+                         "adds N(0, (z*clip*max_w)^2) to the aggregate; "
+                         "requires a finite --dp-clip > 0")
+    ap.add_argument("--dp-delta", type=float, default=1e-5,
+                    help="delta of the reported (eps, delta) guarantee")
+    ap.add_argument("--dp-epsilon-budget", type=float, default=0.0,
+                    help="halt training once cumulative eps exceeds this "
+                         "(0 = unlimited)")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="pairwise-mask secure aggregation: FedAvg runs "
+                         "as a masked fixed-point sum, the server never "
+                         "sees an individual update (docs/privacy.md)")
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--clients-per-round", type=int, default=0)
@@ -403,6 +502,7 @@ def main():
     args = ap.parse_args()
     try:
         transport_mod.make_codec(args.codec)
+        make_privacy(privacy_from_args(args))
     except ValueError as e:
         ap.error(str(e))
     if args.mode == "lm" and args.fleet:

@@ -1,0 +1,24 @@
+"""Privacy subsystem: client-level DP-FedAvg, RDP accounting and
+pairwise-mask secure aggregation over the wire transport's flat stage
+payloads. See docs/privacy.md.
+
+  dp          PrivacyConfig / PrivacyEngine — update clipping (shared by
+              both round engines and both wire paths), calibrated server
+              noise, the per-round RNG stream, secure-FedAvg entry points.
+  accountant  Rényi-DP composition with subsampling amplification and the
+              (ε, δ) conversion (``FLHistory.epsilon``).
+  secure_agg  fixed-point pairwise masking that cancels bit-exactly in
+              the FedAvg sum.
+"""
+from repro.privacy.accountant import (DEFAULT_ORDERS, RDPAccountant,
+                                      compute_epsilon,
+                                      rdp_sampled_gaussian, rdp_to_epsilon)
+from repro.privacy.dp import (PRIVACY_STREAM, PrivacyConfig, PrivacyEngine,
+                              make_privacy)
+from repro.privacy.secure_agg import MASK_ITEMSIZE, SecureAggregator
+
+__all__ = [
+    "DEFAULT_ORDERS", "MASK_ITEMSIZE", "PRIVACY_STREAM", "PrivacyConfig",
+    "PrivacyEngine", "RDPAccountant", "SecureAggregator", "compute_epsilon",
+    "make_privacy", "rdp_sampled_gaussian", "rdp_to_epsilon",
+]

@@ -1,0 +1,240 @@
+"""Client-level DP-FedAvg + the privacy engine the FL stack threads.
+
+DP-FedAvg (McMahan et al. 2018) at client granularity, expressed over the
+transport's flat stage payloads:
+
+  clip    each client's update Δ = payload(trained) - payload(downloaded)
+          is global-norm clipped to C *before* the wire codec, as
+          θ_ref + min(1, C/‖Δ‖)·Δ — so delta codecs (topk) sparsify the
+          clipped delta and cast/quantize codecs ship the clipped model.
+          The transport owns this step (``Transport._upload_one``), which
+          is what makes the two round engines agree by construction: the
+          vmap engine vmaps the very same function inside its jit'd round
+          program, the sequential engine jits it per client, and the
+          pallas wire path mirrors it in numpy (``clip_host``).
+  noise   one server-side Gaussian draw per round on the *aggregated*
+          payload: σ = z · C · max_i w_i. The FedAvg mean's client-level
+          L2 sensitivity is max_i w_i · C (swap one client's clipped
+          update), so the effective noise multiplier seen by the
+          accountant is exactly ``z`` for any weighting — uniform weights
+          recover the familiar z·C/m.
+  account ``repro.privacy.accountant`` composes rounds in RDP space with
+          subsampling amplification q = |cohort| / num_clients.
+
+Exactness contracts (tested): with clip = ∞ the scale is exactly 1.0 and
+the payload passes through *bit-identically* (a ``where`` on scale < 1,
+never ``ref + 1.0·Δ``, which would re-round); with z = 0 the noise step
+is statically skipped, so DP-mode plumbing alone never perturbs training.
+
+Secure aggregation (``cfg.secure_agg``) swaps FedAvg for the pairwise-
+masked fixed-point sum in ``repro.privacy.secure_agg``; the engines'
+``collect=True`` per-client-tree mode feeds it.
+
+RNG: the driver forks one dedicated stream off the run key with
+``jax.random.fold_in(key, PRIVACY_STREAM)`` — fold_in does not consume
+from the key, so the main chain (init, sampling, client keys,
+calibration) is untouched and DP-off runs are byte-identical to
+pre-privacy behavior. Per round the stream is folded again on the round
+index and split into (noise key, mask seed).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.privacy.accountant import RDPAccountant
+from repro.privacy.secure_agg import SecureAggregator
+
+# fold_in tag for the dedicated privacy RNG stream (arbitrary constant,
+# fixed forever: changing it changes every seeded DP run)
+PRIVACY_STREAM = 0x5EC7E7
+
+_NORM_FLOOR = 1e-12      # guards C/‖Δ‖ when the update is exactly zero
+
+
+@dataclass(frozen=True)
+class PrivacyConfig:
+    """Knobs for the privacy subsystem (all off by default).
+
+    clip              L2 clip C on each client's stage-payload update;
+                      0 disables DP entirely, ``inf`` runs the clipping
+                      machinery as an exact pass-through (parity mode).
+    noise_multiplier  z; server noise σ = z·C·max_w. Requires finite
+                      clip > 0.
+    delta             δ of the reported (ε, δ) guarantee.
+    epsilon_budget    hard stop: training halts once cumulative ε
+                      exceeds this (0 = unlimited).
+    secure_agg        pairwise-mask fixed-point aggregation.
+    fraction_bits / mask_range   fixed-point format (secure_agg.py).
+    """
+    clip: float = 0.0
+    noise_multiplier: float = 0.0
+    delta: float = 1e-5
+    epsilon_budget: float = 0.0
+    secure_agg: bool = False
+    fraction_bits: int = 40
+    mask_range: float = 256.0
+
+
+class PrivacyEngine:
+    """One per FL run: owns the accountant, the clip functions both wire
+    engines share, the per-spec noise programs and the secure aggregator."""
+
+    def __init__(self, cfg: PrivacyConfig):
+        if cfg.clip < 0.0:
+            raise ValueError(f"--dp-clip must be >= 0: {cfg.clip}")
+        if cfg.noise_multiplier < 0.0:
+            raise ValueError(f"--dp-noise-multiplier must be >= 0: "
+                             f"{cfg.noise_multiplier}")
+        if cfg.noise_multiplier > 0.0 and not (
+                cfg.clip > 0.0 and math.isfinite(cfg.clip)):
+            raise ValueError(
+                "noise calibration needs a finite --dp-clip > 0: "
+                f"sigma = z*C*max_w is unbounded with clip={cfg.clip}")
+        if not (0.0 < cfg.delta < 1.0):
+            raise ValueError(f"--dp-delta must be in (0, 1): {cfg.delta}")
+        self.cfg = cfg
+        self.accountant = RDPAccountant(cfg.noise_multiplier)
+        self.masker = SecureAggregator(cfg.fraction_bits, cfg.mask_range)
+        self._noise_fns: Dict[Tuple, object] = {}
+
+    # -- mode flags ---------------------------------------------------------
+    @property
+    def dp(self) -> bool:
+        """Clipping (and therefore DP bookkeeping) is active."""
+        return self.cfg.clip > 0.0
+
+    @property
+    def noise_enabled(self) -> bool:
+        return self.cfg.noise_multiplier > 0.0
+
+    # -- clipping (both wire engines) ---------------------------------------
+    def clip_jax(self, flat, ref_flat):
+        """Pure-JAX clip of the payload update: returns (clipped payload,
+        scale). scale == 1.0 (clip >= norm) passes ``flat`` through the
+        ``where`` untouched — bit-exact, including at clip = ∞."""
+        delta = flat - ref_flat
+        nrm = jnp.sqrt(jnp.sum(delta * delta))
+        scale = jnp.minimum(jnp.float32(1.0),
+                            jnp.float32(self.cfg.clip)
+                            / jnp.maximum(nrm, _NORM_FLOOR))
+        return jnp.where(scale < 1.0, ref_flat + scale * delta, flat), scale
+
+    def clip_host(self, flat, ref_flat):
+        """Numpy mirror for the pallas (host) wire path. The no-clip
+        branch returns ``flat`` itself (possibly a pooled wire buffer)
+        untouched."""
+        f32 = np.asarray(flat, np.float32)
+        delta = f32 - np.asarray(ref_flat, np.float32)
+        nrm = float(np.sqrt(np.sum(delta * delta, dtype=np.float32)))
+        scale = min(1.0, self.cfg.clip / max(nrm, _NORM_FLOOR))
+        if scale >= 1.0:
+            return flat, np.float32(1.0)
+        return (np.asarray(ref_flat, np.float32)
+                + np.float32(scale) * delta), np.float32(scale)
+
+    # -- server noise -------------------------------------------------------
+    def sigma(self, max_weight: float) -> float:
+        """Gaussian σ on the aggregated payload for this round's maximum
+        FedAvg weight (the mean's per-client sensitivity is C·max_w)."""
+        if not self.noise_enabled:
+            return 0.0
+        return self.cfg.noise_multiplier * self.cfg.clip * float(max_weight)
+
+    def _noise_fn(self, spec):
+        if spec.sig not in self._noise_fns:
+            from repro.federated import transport as transport_mod
+
+            def fn(tree, flat, key, sig):
+                noise = sig * jax.random.normal(key, (spec.total,),
+                                                transport_mod.WIRE_DTYPE)
+                return transport_mod.unpack_stage_payload(
+                    tree, jnp.asarray(flat, transport_mod.WIRE_DTYPE)
+                    + noise, spec)
+
+            self._noise_fns[spec.sig] = jax.jit(fn)
+        return self._noise_fns[spec.sig]
+
+    def add_noise(self, tree, spec, transport, key, sigma: float):
+        """Add N(0, σ²) over the payload slice of ``tree`` (leaves outside
+        the payload are untouched — they never left the server). σ = 0 is
+        a static skip, so z = 0 cannot perturb a single bit."""
+        if sigma == 0.0:
+            return tree
+        flat = transport._pack_fn(spec)(tree)
+        return self._noise_fn(spec)(tree, flat, key, jnp.float32(sigma))
+
+    # -- secure aggregation -------------------------------------------------
+    def secure_fedavg(self, trees, weights, client_ids, *, spec, transport,
+                      base, seed: Sequence[int], mask: bool = True):
+        """Masked fixed-point FedAvg over decoded per-client trees: pack
+        each onto the payload, mask-and-sum in uint64, unpack the
+        aggregate onto ``base`` (the server keeps its own copy of leaves
+        outside the payload, exactly like the unmasked upload path)."""
+        from repro.federated import transport as transport_mod
+        pack = transport._pack_fn(spec)
+        flats = [np.asarray(pack(t), np.float32) for t in trees]
+        agg = self.masker.aggregate(
+            flats, [float(w) for w in weights],
+            [int(c) for c in client_ids], seed, mask=mask)
+        return transport_mod.unpack_stage_payload(
+            base, jnp.asarray(agg), spec)
+
+    def make_secure_agg_fn(self, transport, spec, base, seed):
+        """Aggregation closure for the buffered-async policy: masks are
+        derived over each flush's arrival set (survivor-set re-masking)."""
+        def agg_fn(trees, weights, client_ids):
+            return self.secure_fedavg(trees, weights, client_ids,
+                                      spec=spec, transport=transport,
+                                      base=base, seed=seed)
+        return agg_fn
+
+    def secure_overhead_bytes(self, spec, codec_wire_bytes: int) -> int:
+        """Per-client wire overhead of masking this payload: the uint64
+        masked residue replaces the codec's wire format."""
+        if not self.cfg.secure_agg:
+            return 0
+        return max(0, self.masker.masked_bytes(spec.total)
+                   - int(codec_wire_bytes))
+
+    # -- per-round RNG ------------------------------------------------------
+    @staticmethod
+    def fork_stream(key):
+        """The run's dedicated privacy stream (driver calls this once)."""
+        return jax.random.fold_in(key, PRIVACY_STREAM)
+
+    @staticmethod
+    def round_keys(stream_key, round_idx: int):
+        """(noise key, mask seed ints) for one round, independent of the
+        main training chain and of each other."""
+        k = jax.random.fold_in(stream_key, round_idx)
+        k_noise, k_mask = jax.random.split(k)
+        seed = tuple(int(x) for x in np.asarray(k_mask).ravel())
+        return k_noise, seed
+
+
+def make_privacy(privacy) -> Optional[PrivacyEngine]:
+    """None / PrivacyConfig / PrivacyEngine -> engine or None (disabled).
+
+    A config with every mechanism off maps to None so the driver's fast
+    path stays literally unchanged; noise without clipping is rejected
+    here rather than silently un-calibrated.
+    """
+    if privacy is None:
+        return None
+    if isinstance(privacy, PrivacyEngine):
+        return privacy
+    if not isinstance(privacy, PrivacyConfig):
+        raise TypeError(f"privacy must be a PrivacyConfig or "
+                        f"PrivacyEngine: {type(privacy).__name__}")
+    if privacy.clip == 0.0 and not privacy.secure_agg:
+        if privacy.noise_multiplier > 0.0:
+            raise ValueError("noise calibration needs a finite "
+                             "--dp-clip > 0 (sigma = z*C*max_w)")
+        return None
+    return PrivacyEngine(privacy)

@@ -1,0 +1,147 @@
+"""Pairwise-mask additive secure aggregation over the flat wire payload.
+
+Bonawitz et al. 2017 shape: every surviving client pair (a, b), a < b,
+derives the same mask vector ``m_ab`` from a shared per-round seed; the
+lower id adds it to its (weighted, fixed-point) payload, the higher id
+subtracts it. Each individual masked message is uniformly random, but the
+masks telescope out of the sum, so the server recovers exactly
+
+  Σ_i  fix(w_i · x_i)
+
+and nothing else. Cancellation must be *bit-exact*, which floats cannot
+promise (rounding of ``x + m - m`` depends on the magnitude of ``m``), so
+payloads ride the wire as two's-complement fixed point in uint64:
+
+  q = round(w · x · 2^f)   (mod 2^64),   f = ``fraction_bits``
+
+where modular uint64 addition is associative and exact — masked and
+unmasked sums agree to the bit (the property test in
+``tests/test_privacy.py`` checks it across the vit/xlstm/zamba leaf
+families). Dequantization back to fp32 costs one rounding of 2^-f per
+element per client (f = 40 ⇒ ~1e-12), the measured gap between
+secure-aggregated and float FedAvg training.
+
+Dropouts: the real protocol reconstructs dropped clients' mask shares via
+secret sharing. This simulation uses the documented *survivor-set
+re-masking* alternative instead: masks are derived at aggregation time
+over exactly the set of updates entering the sum, which composes cleanly
+with the fleet simulator — the deadline policy decides its survivor set
+before training, and the buffered-async policy masks over each buffer
+flush's arrival set (see docs/privacy.md for the threat-model caveat).
+
+All of this is host-side numpy: the transport's per-client codec path
+(including error-feedback residuals) runs unchanged, and masking wraps
+the decoded payloads at the aggregation boundary.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+MASK_DTYPE = np.uint64
+MASK_ITEMSIZE = np.dtype(MASK_DTYPE).itemsize      # 8 bytes/element
+
+
+class SecureAggregator:
+    """Fixed-point pairwise masking over flat fp32 payloads.
+
+    ``fraction_bits`` sets the quantization step 2^-f; ``value_range``
+    clamps |w·x| before quantization so the headroom analysis holds:
+    with f = 40 and R = 256 each term is < 2^48, leaving room for ~2^15
+    clients in the int64 sum before overflow.
+    """
+
+    def __init__(self, fraction_bits: int = 40, value_range: float = 256.0):
+        if not (1 <= fraction_bits <= 52):
+            # 2^f must stay exactly representable in the float64 staging
+            raise ValueError(
+                f"fraction_bits must be in [1, 52]: {fraction_bits}")
+        if value_range <= 0:
+            raise ValueError(f"value_range must be > 0: {value_range}")
+        self.fraction_bits = int(fraction_bits)
+        self.value_range = float(value_range)
+        self._scale = float(2 ** fraction_bits)
+
+    # -- fixed point --------------------------------------------------------
+    def quantize(self, flat, weight: float) -> np.ndarray:
+        """fp32 payload -> weighted two's-complement fixed point (uint64)."""
+        x = np.asarray(flat, np.float64) * float(weight)
+        x = np.clip(x, -self.value_range, self.value_range)
+        return np.rint(x * self._scale).astype(np.int64).astype(MASK_DTYPE)
+
+    def dequantize(self, acc: np.ndarray) -> np.ndarray:
+        """uint64 modular sum -> fp32 (int64 view restores the sign)."""
+        return (acc.view(np.int64).astype(np.float64)
+                / self._scale).astype(np.float32)
+
+    # -- masks --------------------------------------------------------------
+    @staticmethod
+    def pair_mask(seed: Sequence[int], a: int, b: int,
+                  n: int) -> np.ndarray:
+        """The shared mask for client pair (a, b): full-range uint64 drawn
+        from a PRG keyed on (round seed, min id, max id) — both endpoints
+        derive the identical vector."""
+        if a == b:
+            raise ValueError("a client does not mask against itself")
+        lo, hi = (a, b) if a < b else (b, a)
+        rng = np.random.default_rng([*(int(s) for s in seed),
+                                     int(lo), int(hi)])
+        return rng.integers(0, np.iinfo(MASK_DTYPE).max, size=n,
+                            dtype=MASK_DTYPE, endpoint=True)
+
+    def mask_payload(self, q: np.ndarray, client_id: int,
+                     survivors: Sequence[int], seed: Sequence[int],
+                     _cache: Dict[Tuple[int, int], np.ndarray] = None
+                     ) -> np.ndarray:
+        """One client's wire message: fixed-point payload plus/minus the
+        pairwise masks against every *other* survivor (mod 2^64)."""
+        y = q.copy()
+        cid = int(client_id)
+        for other in survivors:
+            o = int(other)
+            if o == cid:
+                continue
+            pair = (min(cid, o), max(cid, o))
+            if _cache is not None and pair in _cache:
+                m = _cache[pair]
+            else:
+                m = self.pair_mask(seed, cid, o, q.shape[0])
+                if _cache is not None:
+                    _cache[pair] = m
+            if cid < o:
+                y += m
+            else:
+                y -= m
+        return y
+
+    # -- aggregation --------------------------------------------------------
+    def aggregate(self, flats, weights, client_ids, seed: Sequence[int],
+                  *, mask: bool = True) -> np.ndarray:
+        """Weighted FedAvg sum through the masked fixed-point pipeline.
+
+        ``mask=False`` runs the identical fixed-point path without masks —
+        the reference the bit-identity tests compare against (and the
+        proof that any difference would come from the masks alone).
+        Returns the fp32 flat aggregate Σ_i w_i · x_i.
+        """
+        ids = [int(c) for c in client_ids]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate client ids in survivor set: {ids}")
+        if len(flats) != len(ids) or len(list(weights)) != len(ids):
+            raise ValueError("flats / weights / client_ids length mismatch")
+        if not flats:
+            raise ValueError("nothing to aggregate")
+        n = int(np.asarray(flats[0]).shape[0])
+        acc = np.zeros(n, MASK_DTYPE)
+        cache: Dict[Tuple[int, int], np.ndarray] = {}
+        for flat, w, cid in zip(flats, weights, ids):
+            q = self.quantize(flat, float(w))
+            if mask:
+                q = self.mask_payload(q, cid, ids, seed, _cache=cache)
+            acc += q
+        return self.dequantize(acc)
+
+    def masked_bytes(self, total: int) -> int:
+        """Wire size of one client's masked payload: uint64 per element."""
+        return int(total) * MASK_ITEMSIZE

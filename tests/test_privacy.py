@@ -1,0 +1,478 @@
+"""Privacy subsystem invariants: RDP accountant pinned against published
+reference values, bit-exact pairwise-mask cancellation across the
+vit / xlstm / zamba leaf families and all five schedules' payload specs,
+DP-off / clip=inf bit-parity of both engines against the baseline driver,
+dedicated-noise-stream determinism, FLHistory v1/v2 compatibility,
+epsilon-budget halting, secure aggregation under the fleet simulator,
+privacy attributes in obs round spans, and the privacy bench schema.
+"""
+import functools
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import FLConfig, ModelConfig, SSLConfig, TrainConfig
+from repro.core import schedule as sched
+from repro.data import iid_partition, synthetic_images
+from repro.federated import aggregate, driver, fleet, simulation
+from repro.federated.driver import FLHistory, run_fedssl
+from repro.federated.transport import (Transport, build_payload_spec,
+                                       pack_stage_payload)
+from repro.obs import make_obs
+from repro.privacy import (DEFAULT_ORDERS, MASK_ITEMSIZE, PrivacyConfig,
+                           PrivacyEngine, RDPAccountant, SecureAggregator,
+                           compute_epsilon, make_privacy,
+                           rdp_sampled_gaussian, rdp_to_epsilon)
+from test_transport import FAMILIES, family_tree
+
+# ---------------------------------------------------------------------------
+# accountant: pinned references and closed forms
+# ---------------------------------------------------------------------------
+def test_epsilon_pinned_references():
+    """q=1, z=1, delta=1e-5: one round of the plain Gaussian mechanism
+    gives eps = min_a a/2 + log(1e5)/(a-1) = 5.302585... (at a=6); 100
+    rounds compose to 111.512925... (at a=2). Both are the standard
+    moments-accountant reference values for these settings."""
+    assert compute_epsilon(1.0, 1.0, 1, 1e-5) == pytest.approx(
+        5.302585093, abs=1e-3)
+    assert compute_epsilon(1.0, 1.0, 100, 1e-5) == pytest.approx(
+        111.512925465, abs=1e-3)
+
+
+def test_rdp_closed_forms():
+    # q=1 collapses to the plain Gaussian mechanism a/(2 sigma^2)
+    for a in (2, 5, 32):
+        for s in (0.5, 1.0, 4.0):
+            assert rdp_sampled_gaussian(1.0, s, a) == pytest.approx(
+                a / (2 * s * s), rel=1e-12)
+    # alpha=2 binomial sum has the textbook closed form
+    q = 0.01
+    want = math.log(1.0 + q * q * (math.e - 1.0))
+    assert rdp_sampled_gaussian(q, 1.0, 2) == pytest.approx(want, rel=1e-9)
+    assert rdp_sampled_gaussian(0.0, 1.0, 8) == 0.0
+    assert rdp_sampled_gaussian(0.5, 0.0, 8) == math.inf
+
+
+def test_rdp_validation():
+    with pytest.raises(ValueError):
+        rdp_sampled_gaussian(0.5, 1.0, 1)          # alpha < 2
+    with pytest.raises(ValueError):
+        rdp_sampled_gaussian(0.5, 1.0, 2.5)        # non-integer alpha
+    with pytest.raises(ValueError):
+        rdp_sampled_gaussian(1.5, 1.0, 2)          # q outside [0, 1]
+    with pytest.raises(ValueError):
+        rdp_to_epsilon([1.0], [2], 0.0)            # delta outside (0, 1)
+    with pytest.raises(ValueError):
+        RDPAccountant(-0.1)
+
+
+def test_epsilon_monotone_and_amplified():
+    e1 = compute_epsilon(0.1, 1.1, 10, 1e-5)
+    e2 = compute_epsilon(0.1, 1.1, 100, 1e-5)
+    assert 0.0 < e1 < e2                           # more rounds, more eps
+    assert compute_epsilon(0.1, 2.0, 100, 1e-5) < e2   # more noise, less
+    # subsampling amplification: q < 1 strictly beats full participation
+    assert e2 < compute_epsilon(1.0, 1.1, 100, 1e-5)
+
+
+def test_accountant_edges():
+    acct = RDPAccountant(1.0)
+    assert acct.epsilon(1e-5) == 0.0               # nothing observed yet
+    acct.observe_round(0.5)
+    assert math.isfinite(acct.epsilon(1e-5))
+    zero = RDPAccountant(0.0)
+    zero.observe_round(1.0)
+    assert zero.epsilon(1e-5) == math.inf          # no noise, no guarantee
+
+
+@given(q=st.floats(0.01, 0.99), sigma=st.floats(0.6, 4.0),
+       alpha=st.integers(2, 40))
+@settings(max_examples=30, deadline=None)
+def test_rdp_nonnegative_finite(q, sigma, alpha):
+    r = rdp_sampled_gaussian(q, sigma, alpha)
+    assert 0.0 <= r < math.inf
+    # subsampled mechanism never exceeds the q=1 Gaussian mechanism
+    assert r <= alpha / (2 * sigma * sigma) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# secure aggregation: masks, fixed point, bit-exact cancellation
+# ---------------------------------------------------------------------------
+def test_pair_mask_shared_and_distinct():
+    seed = (1, 2, 3)
+    a = SecureAggregator.pair_mask(seed, 2, 5, 64)
+    b = SecureAggregator.pair_mask(seed, 5, 2, 64)
+    np.testing.assert_array_equal(a, b)            # both endpoints agree
+    c = SecureAggregator.pair_mask(seed, 2, 6, 64)
+    assert not np.array_equal(a, c)                # distinct per pair
+    d = SecureAggregator.pair_mask((9, 2, 3), 2, 5, 64)
+    assert not np.array_equal(a, d)                # distinct per round seed
+    with pytest.raises(ValueError):
+        SecureAggregator.pair_mask(seed, 3, 3, 64)
+
+
+@given(fam=st.sampled_from(FAMILIES), seed=st.integers(0, 6))
+@settings(max_examples=9, deadline=None)
+def test_masks_cancel_bit_exact_across_families(fam, seed):
+    """aggregate(mask=True) == aggregate(mask=False) to the bit: uint64
+    modular arithmetic makes the pairwise masks telescope exactly out of
+    the sum for every stacked-key leaf family."""
+    tree, S = family_tree(fam, seed)
+    spec = build_payload_spec(tree, (0, S), include_embed=True,
+                              include_heads=True)
+    rng = np.random.default_rng(seed)
+    flats = [pack_stage_payload(tree, spec)
+             * jnp.float32(1.0 + 0.1 * i) for i in range(3)]
+    w = rng.dirichlet(np.ones(3))
+    ids = [int(i) for i in rng.permutation(10)[:3]]
+    agg = SecureAggregator()
+    masked = agg.aggregate(flats, w, ids, (seed, 7), mask=True)
+    plain = agg.aggregate(flats, w, ids, (seed, 7), mask=False)
+    np.testing.assert_array_equal(masked, plain)
+    # and the fixed-point sum tracks the float sum to quantization error
+    ref = sum(np.asarray(f, np.float64) * wi for f, wi in zip(flats, w))
+    np.testing.assert_allclose(masked, ref, atol=1e-6, rtol=0)
+
+
+@pytest.mark.parametrize("schedule", sched.SCHEDULES)
+def test_masks_cancel_for_every_schedule_spec(schedule):
+    """Bit-exact cancellation on the actual upload payload spec of every
+    round of all five schedules (specs differ in stage range / embed /
+    head inclusion across schedules)."""
+    tree, S = family_tree("vit", 0)
+    fl = FLConfig(num_clients=3, rounds=max(4, S), local_epochs=1,
+                  schedule=schedule)
+    wire = Transport("fp32")
+    agg = SecureAggregator()
+    for plan in sched.build_schedule(fl, S):
+        spec = wire.plan_specs(tree, plan)["upload"]
+        flats = [pack_stage_payload(tree, spec) * jnp.float32(1.0 + 0.2 * i)
+                 for i in range(3)]
+        w = aggregate.client_weights([5, 7, 9])
+        masked = agg.aggregate(flats, np.asarray(w), [0, 1, 2],
+                               (42, plan.round_idx), mask=True)
+        plain = agg.aggregate(flats, np.asarray(w), [0, 1, 2],
+                              (42, plan.round_idx), mask=False)
+        np.testing.assert_array_equal(masked, plain)
+
+
+def test_secure_agg_validation():
+    agg = SecureAggregator()
+    x = [np.ones(4, np.float32)] * 2
+    with pytest.raises(ValueError):
+        agg.aggregate(x, [0.5, 0.5], [1, 1], (0,))      # duplicate ids
+    with pytest.raises(ValueError):
+        agg.aggregate(x, [1.0], [0, 1], (0,))           # length mismatch
+    with pytest.raises(ValueError):
+        agg.aggregate([], [], [], (0,))                 # empty
+    with pytest.raises(ValueError):
+        SecureAggregator(fraction_bits=60)
+    with pytest.raises(ValueError):
+        SecureAggregator(value_range=0.0)
+    assert agg.masked_bytes(100) == 100 * MASK_ITEMSIZE
+
+
+def test_quantize_clamps_to_value_range():
+    agg = SecureAggregator(fraction_bits=10, value_range=2.0)
+    q = agg.quantize(np.asarray([-5.0, 0.25, 5.0], np.float32), 1.0)
+    out = agg.dequantize(q)
+    np.testing.assert_allclose(out, [-2.0, 0.25, 2.0], atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# PrivacyEngine configuration and streams
+# ---------------------------------------------------------------------------
+def test_make_privacy_gating():
+    assert make_privacy(None) is None
+    assert make_privacy(PrivacyConfig()) is None    # all features off
+    eng = make_privacy(PrivacyConfig(clip=1.0))
+    assert eng.dp and not eng.noise_enabled
+    with pytest.raises(ValueError):
+        make_privacy(PrivacyConfig(noise_multiplier=1.0))   # noise w/o clip
+    with pytest.raises(ValueError):
+        make_privacy(PrivacyConfig(clip=1.0, delta=1.5))
+    with pytest.raises(TypeError):
+        make_privacy({"clip": 1.0})
+
+
+def test_round_keys_deterministic_per_round():
+    key = jax.random.PRNGKey(3)
+    s1, s2 = PrivacyEngine.fork_stream(key), PrivacyEngine.fork_stream(key)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    k0, m0 = PrivacyEngine.round_keys(s1, 0)
+    k0b, m0b = PrivacyEngine.round_keys(s2, 0)
+    np.testing.assert_array_equal(np.asarray(k0), np.asarray(k0b))
+    assert m0 == m0b and isinstance(m0, tuple)
+    k1, m1 = PrivacyEngine.round_keys(s1, 1)
+    assert m0 != m1
+    assert not np.array_equal(np.asarray(k0), np.asarray(k1))
+
+
+def test_clip_paths_agree_and_pass_through():
+    eng = make_privacy(PrivacyConfig(clip=0.5))
+    rng = np.random.default_rng(0)
+    ref = jnp.asarray(rng.normal(size=64), jnp.float32)
+    flat = ref + jnp.asarray(rng.normal(size=64), jnp.float32)
+    out_j, sc_j = eng.clip_jax(flat, ref)
+    out_h, sc_h = eng.clip_host(np.asarray(flat), np.asarray(ref))
+    np.testing.assert_allclose(np.asarray(out_j), out_h, atol=1e-6, rtol=0)
+    assert float(sc_j) == pytest.approx(float(sc_h), rel=1e-6) and sc_h < 1.0
+    norm = float(np.linalg.norm(np.asarray(out_j) - np.asarray(ref)))
+    assert norm == pytest.approx(0.5, rel=1e-5)
+    # below-threshold updates pass through bit-exactly on both paths
+    wide = make_privacy(PrivacyConfig(clip=float("inf")))
+    wj, wsj = wide.clip_jax(flat, ref)
+    wh, wsh = wide.clip_host(np.asarray(flat), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(wj), np.asarray(flat))
+    np.testing.assert_array_equal(wh, np.asarray(flat))
+    assert float(wsj) == 1.0 and float(wsh) == 1.0
+
+
+def test_sigma_scaling():
+    eng = make_privacy(PrivacyConfig(clip=2.0, noise_multiplier=1.5))
+    assert eng.noise_enabled
+    assert eng.sigma(0.25) == pytest.approx(1.5 * 2.0 * 0.25)
+    off = make_privacy(PrivacyConfig(clip=2.0))
+    assert off.sigma(0.25) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# driver integration (tiny vit runs, memoized across tests)
+# ---------------------------------------------------------------------------
+CFG = ModelConfig("t-vit", "dense", 2, 32, 2, 2, 64, 0, causal=False,
+                  compute_dtype="float32", act="gelu")
+SSLC = SSLConfig(proj_hidden=32, pred_hidden=32, proj_dim=16)
+TC = TrainConfig(batch_size=16, base_lr=1.5e-4)
+N_CLIENTS = 3
+_IMAGES = jnp.asarray(
+    np.random.default_rng(0).normal(size=(96, 32, 32, 3)), jnp.float32)
+_INDICES = tuple(np.arange(i * 32, (i + 1) * 32) for i in range(N_CLIENTS))
+
+
+@functools.lru_cache(maxsize=None)
+def run_driver(engine="sequential", privacy=None, schedule="e2e", rounds=2,
+               policy=None, profile="uniform", obs_trace=False):
+    fl = FLConfig(num_clients=N_CLIENTS, rounds=rounds, local_epochs=1,
+                  schedule=schedule)
+    sim = None
+    if policy is not None:
+        sim = simulation.make_sim(
+            fleet.make_fleet(profile, N_CLIENTS, seed=0), policy,
+            num_clients=N_CLIENTS, seed=0)
+    obs = make_obs(trace=True) if obs_trace else None
+    state, hist = run_fedssl(
+        CFG, SSLC, fl, TC, images=_IMAGES, client_indices=list(_INDICES),
+        aux_images=_IMAGES[:16], key=jax.random.PRNGKey(0), engine=engine,
+        privacy=privacy, sim=sim, obs=obs)
+    return state, hist, obs
+
+
+def _leaves(state):
+    return [np.asarray(x) for x in jax.tree.leaves(state["online"])]
+
+
+def assert_states_equal(a, b):
+    for x, y in zip(_leaves(a), _leaves(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+def max_state_delta(a, b):
+    return max(float(np.max(np.abs(x - y)))
+               for x, y in zip(_leaves(a), _leaves(b)))
+
+
+@pytest.mark.parametrize("engine", ("sequential", "vmap"))
+def test_dp_mode_off_is_bit_identical(engine):
+    """clip=inf / noise=0 threads the whole privacy path (clip op, forked
+    RNG stream, accountant) yet changes nothing: states bit-identical to
+    the privacy=None baseline on both engines."""
+    s0, h0, _ = run_driver(engine)
+    for cfg in (PrivacyConfig(clip=float("inf")), PrivacyConfig(clip=1e9)):
+        s1, h1, _ = run_driver(engine, cfg)
+        assert_states_equal(s0, s1)
+        assert h1.loss == h0.loss
+        assert h1.epsilon == [math.inf, math.inf]   # honest: no noise
+        assert h1.clip_fraction == [0.0, 0.0]
+    assert h0.epsilon == [] and h0.clip_fraction == []
+
+
+@pytest.mark.parametrize("engine", ("sequential", "vmap"))
+def test_secure_agg_matches_float_fedavg(engine):
+    """Secure aggregation (fp32 codec) tracks the float FedAvg baseline to
+    fixed-point quantization error and records its wire overhead."""
+    s0, _, _ = run_driver(engine)
+    s2, h2, _ = run_driver(engine, PrivacyConfig(secure_agg=True))
+    assert max_state_delta(s0, s2) < 1e-5
+    assert len(h2.secure_agg_overhead_bytes) == 2
+    assert all(b > 0 for b in h2.secure_agg_overhead_bytes)
+    assert h2.epsilon == [math.inf, math.inf]       # secure-agg is not DP
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("schedule", sched.SCHEDULES)
+def test_secure_agg_all_schedules(schedule):
+    """Acceptance: --secure-agg with the fp32 codec stays within
+    quantization error of the unmasked driver for all five schedules
+    (bit-exactness of masked-vs-unmasked aggregation is the payload-level
+    test above; this covers the full driver loop per schedule)."""
+    s0, h0, _ = run_driver("sequential", None, schedule, 3)
+    s1, h1, _ = run_driver("sequential", PrivacyConfig(secure_agg=True),
+                           schedule, 3)
+    assert max_state_delta(s0, s1) < 5e-5
+    np.testing.assert_allclose(h0.loss, h1.loss, atol=1e-4, rtol=0)
+
+
+def test_dp_run_deterministic_and_stream_isolated():
+    """Same seed => bit-identical DP run (dedicated noise stream), and the
+    noise stream never perturbs the training chain: round-0 losses match
+    the baseline exactly (noise lands after the round's training)."""
+    cfg = PrivacyConfig(clip=1.0, noise_multiplier=0.8)
+    fl = FLConfig(num_clients=N_CLIENTS, rounds=2, local_epochs=1,
+                  schedule="e2e")
+    runs = [run_fedssl(CFG, SSLC, fl, TC, images=_IMAGES,
+                       client_indices=list(_INDICES), aux_images=_IMAGES[:16],
+                       key=jax.random.PRNGKey(0), privacy=cfg)
+            for _ in range(2)]
+    (sa, ha), (sb, hb) = runs
+    assert ha.loss == hb.loss and ha.epsilon == hb.epsilon
+    assert_states_equal(sa, sb)
+    _, h0, _ = run_driver("sequential")
+    assert ha.loss[0] == h0.loss[0]
+    assert ha.loss[1] != h0.loss[1]                 # noise did something
+    assert all(0.0 < e < math.inf for e in ha.epsilon)
+    assert ha.epsilon[0] < ha.epsilon[1]            # composition grows eps
+
+
+def test_noise_changes_state_but_noiseless_does_not():
+    s_clip, _, _ = run_driver("sequential", PrivacyConfig(clip=1.0))
+    s_dp, h_dp, _ = run_driver(
+        "sequential", PrivacyConfig(clip=1.0, noise_multiplier=0.5))
+    d = max_state_delta(s_clip, s_dp)
+    assert np.isfinite(d) and d > 0.0
+    assert all(np.isfinite(h_dp.loss))
+
+
+def test_tight_clip_saturates_clip_fraction():
+    _, h, _ = run_driver("sequential", PrivacyConfig(clip=1e-3))
+    assert h.clip_fraction == [1.0, 1.0]
+
+
+def test_epsilon_budget_halts_training():
+    _, h, _ = run_driver(
+        "sequential",
+        PrivacyConfig(clip=1e-3, noise_multiplier=1.1, epsilon_budget=1.0),
+        "e2e", 5)
+    assert len(h.loss) < 5                          # stopped early
+    assert h.epsilon[-1] > 1.0                      # because eps crossed it
+
+
+@pytest.mark.parametrize("policy", ("deadline", "buffered-async"))
+def test_secure_agg_with_fleet_policies(policy):
+    """Survivor-set re-masking composes with deadline drops and async
+    buffer flushes: runs complete with finite losses and record both the
+    simulator accounting and the mask overhead."""
+    _, h, _ = run_driver("sequential", PrivacyConfig(secure_agg=True),
+                         "e2e", 3, policy, "pareto-stragglers")
+    assert len(h.loss) == 3 and all(np.isfinite(h.loss))
+    assert len(h.round_wall_clock) == 3
+    assert all(b > 0 for b in h.secure_agg_overhead_bytes)
+
+
+def test_traced_dp_round_spans_carry_privacy_attrs():
+    _, h, obs = run_driver(
+        "sequential", PrivacyConfig(clip=1.0, noise_multiplier=1.1,
+                                    secure_agg=True), obs_trace=True)
+    rounds = [e for e in obs.tracer.events if e["name"] == "round"]
+    assert len(rounds) == 2
+    for e, eps, ov in zip(rounds, h.epsilon, h.secure_agg_overhead_bytes):
+        assert e["args"]["epsilon"] == pytest.approx(eps)
+        assert e["args"]["secure_agg_overhead_bytes"] == ov
+        assert "clip_fraction" in e["args"]
+
+
+# ---------------------------------------------------------------------------
+# FLHistory v2 schema
+# ---------------------------------------------------------------------------
+def test_history_v2_roundtrip_with_privacy_fields():
+    _, h, _ = run_driver(
+        "sequential", PrivacyConfig(clip=1.0, noise_multiplier=1.1,
+                                    secure_agg=True))
+    d = h.to_dict()
+    assert d["version"] == driver.HISTORY_VERSION == 2
+    back = FLHistory.from_dict(json.loads(json.dumps(d)))
+    assert back.epsilon == h.epsilon
+    assert back.clip_fraction == h.clip_fraction
+    assert back.secure_agg_overhead_bytes == h.secure_agg_overhead_bytes
+    # inf epsilons survive the JSON round trip too
+    _, h_inf, _ = run_driver("sequential", PrivacyConfig(secure_agg=True))
+    back_inf = FLHistory.from_dict(json.loads(json.dumps(h_inf.to_dict(),
+                                                         allow_nan=True)))
+    assert back_inf.epsilon == [math.inf, math.inf]
+
+
+def test_history_v1_documents_still_load():
+    _, h, _ = run_driver("sequential")
+    d = h.to_dict()
+    d["version"] = 1
+    for name in ("epsilon", "clip_fraction", "secure_agg_overhead_bytes"):
+        d["fields"].pop(name, None)
+    back = FLHistory.from_dict(d)
+    assert back.loss == h.loss
+    assert back.epsilon == []                       # defaults fill in
+
+
+def test_history_version_and_field_validation():
+    _, h, _ = run_driver("sequential")
+    bad = h.to_dict()
+    bad["version"] = 3
+    with pytest.raises(ValueError):
+        FLHistory.from_dict(bad)
+    bad2 = h.to_dict()
+    bad2["fields"]["not_a_field"] = [1]
+    with pytest.raises(ValueError):
+        FLHistory.from_dict(bad2)
+
+
+# ---------------------------------------------------------------------------
+# benchmarks: privacy suite + --only list selection
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_bench_privacy_small_doc_validates():
+    from benchmarks.run import bench_privacy
+    from benchmarks.schemas import validate_privacy_bench
+    doc = bench_privacy(rounds=2, clients=2, schedules=("e2e",),
+                        codecs=("fp32",), write=False)
+    assert validate_privacy_bench(doc) == []
+    rows = doc["rows"]
+    assert {r["codec"] for r in rows} == {"fp32"}
+    dp_rows = [r for r in rows if r["dp"]]
+    assert dp_rows and all(r["epsilon"] > 0 for r in dp_rows)
+    assert any(r["secure_agg"] and r["mask_overhead_mb"] > 0 for r in rows)
+
+
+def test_select_benches_comma_list():
+    from benchmarks.run import _select_benches
+    table = {"a": 1, "b": 2, "c": 3}
+    assert list(_select_benches("a", table)) == ["a"]
+    assert list(_select_benches("b, c", table)) == ["b", "c"]
+    with pytest.raises(ValueError, match="unknown bench"):
+        _select_benches("a,nope", table)
+    with pytest.raises(ValueError):
+        _select_benches(",,", table)
+
+
+def test_validate_privacy_bench_cross_checks():
+    from benchmarks.schemas import validate_privacy_bench
+    row = dict(schedule="e2e", codec="fp32", dp=True, secure_agg=False,
+               rounds=2, clients=2, final_loss=1.0, utility_delta=0.0,
+               wire_mb=1.0, mask_overhead_mb=0.0, rounds_per_sec=1.0,
+               slowdown=1.0, epsilon=None, clip_fraction=None)
+    doc = {"bench": "privacy", "config": {}, "rows": [row]}
+    assert any("epsilon" in p for p in validate_privacy_bench(doc))
+    row["dp"], row["epsilon"], row["clip_fraction"] = False, 3.0, 0.5
+    assert any("epsilon" in p for p in validate_privacy_bench(doc))
