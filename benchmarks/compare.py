@@ -1,0 +1,271 @@
+"""Bench regression gate: diff results/ documents against committed
+baselines under benchmarks/baselines/.
+
+CI's ``regression`` job runs the seeded benches and then::
+
+    python -m benchmarks.compare
+
+which pairs every ``benchmarks/baselines/<name>_bench.json`` with the
+freshly written ``results/<name>_bench.json``, validates both against
+``benchmarks.schemas``, and compares only the *deterministic* metrics —
+seeded losses, analytic and XLA-measured costs, wire sizes — each with
+an explicit per-metric tolerance. Timing metrics (GB/s, rounds/sec,
+wall-clock) and the provenance header are never compared: they vary per
+host and would make the gate flaky. Any drift, missing row, or new row
+is reported and the process exits nonzero.
+
+To accept an intentional change, regenerate the bench and copy the new
+document over the baseline::
+
+    python -m benchmarks.run --only resources
+    cp results/resources_bench.json benchmarks/baselines/
+
+Single-file usage (explicit pair)::
+
+    python -m benchmarks.compare results/resources_bench.json \
+        benchmarks/baselines/resources_bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+RESULTS = REPO / "results"
+BASELINES = REPO / "benchmarks" / "baselines"
+
+
+@dataclass(frozen=True)
+class BenchSpec:
+    """What to compare for one bench family: how rows are keyed, and
+    which metrics gate with which (rtol, atol). Metric paths are dotted
+    and may use ``*`` to fan out over a dict level (codec tables)."""
+    key: Tuple[str, ...]
+    metrics: Dict[str, Tuple[float, float]]
+
+
+# Deterministic-metric gate per bench. Everything not listed is ignored
+# on purpose — notably all throughput/wall-clock numbers and the
+# ``history`` blobs the simulation rows embed.
+SPECS: Dict[str, BenchSpec] = {
+    "resources": BenchSpec(
+        key=("engine", "schedule"),
+        metrics={
+            # XLA cost analysis is deterministic for a fixed jax
+            # version; the slack absorbs cross-version flop-count shifts
+            "flops_total": (0.05, 0.0),
+            "analytic_flops_total": (1e-6, 0.0),
+            "analytic_peak_memory": (1e-6, 0.0),
+            "program_peak_analytic": (1e-6, 0.0),
+            # buffer assignment moves more than flop counts do
+            "peak_memory": (0.25, 0.0),
+            "comm_bytes": (0.0, 0.0),
+            "comm_ratio": (1e-9, 0.0),
+            "flops_ratio": (0.05, 0.0),
+            "analytic_flops_ratio": (1e-6, 0.0),
+            "analytic_memory_ratio": (1e-6, 0.0),
+        }),
+    "simulation": BenchSpec(
+        key=("schedule", "fleet", "policy"),
+        metrics={
+            # simulated clocks/energy are seeded model outputs, not
+            # host timings — they must reproduce exactly-ish
+            "final_loss": (1e-3, 1e-6),
+            "target_loss": (1e-3, 1e-6),
+            "total_wall_clock_s": (1e-6, 0.0),
+            "device_seconds": (1e-6, 0.0),
+            "energy_j": (1e-6, 0.0),
+            "dropped_client_rounds": (0.0, 0.0),
+            "wall_clock_to_target_s": (1e-6, 0.0),
+        }),
+    "transport": BenchSpec(
+        key=("schedule",),
+        metrics={
+            "upload_payload_mb": (1e-6, 0.0),
+            "codecs.*.round_wire_mb": (1e-6, 0.0),
+            "codecs.*.ratio": (1e-6, 0.0),
+        }),
+    "privacy": BenchSpec(
+        key=("schedule", "codec", "dp", "secure_agg"),
+        metrics={
+            "final_loss": (1e-3, 1e-6),
+            "utility_delta": (0.0, 2e-3),
+            "epsilon": (1e-6, 0.0),
+            "wire_mb": (1e-6, 0.0),
+            "mask_overhead_mb": (1e-6, 0.0),
+        }),
+}
+
+VALIDATORS = {
+    "resources": "validate_resources_bench",
+    "simulation": "validate_simulation_bench",
+    "transport": "validate_transport_bench",
+    "privacy": "validate_privacy_bench",
+}
+
+
+def _row_key(row: dict, fields: Tuple[str, ...]) -> tuple:
+    return tuple(row.get(f) for f in fields)
+
+
+def _lookup(row: Any, path: str) -> List[Tuple[str, Any]]:
+    """Resolve a dotted metric path; ``*`` fans out over dict keys.
+    Returns ``[(concrete_path, value), ...]`` — a missing segment yields
+    a single ``(path, KeyError)`` marker so drift is reported, not
+    swallowed."""
+    out = [("", row)]
+    for seg in path.split("."):
+        nxt = []
+        for prefix, v in out:
+            if not isinstance(v, dict):
+                nxt.append((prefix or path, KeyError))
+                continue
+            if seg == "*":
+                for k in sorted(v):
+                    nxt.append((f"{prefix}.{k}" if prefix else k, v[k]))
+            elif seg in v:
+                nxt.append((f"{prefix}.{seg}" if prefix else seg, v[seg]))
+            else:
+                nxt.append((f"{prefix}.{seg}" if prefix else seg, KeyError))
+        out = nxt
+    return out
+
+
+def _drifted(base: Any, new: Any, rtol: float, atol: float) -> bool:
+    if base is None or new is None:
+        return base is not new
+    if isinstance(base, bool) or isinstance(new, bool) \
+            or not isinstance(base, (int, float)) \
+            or not isinstance(new, (int, float)):
+        return base != new
+    return abs(new - base) > max(atol, rtol * abs(base))
+
+
+def compare_docs(bench: str, result: dict, baseline: dict) -> List[str]:
+    """Compare a result document against its baseline; returns a list of
+    human-readable drift problems (empty = gate passes)."""
+    spec = SPECS.get(bench)
+    if spec is None:
+        return [f"{bench}: no comparison spec (update benchmarks/compare.py)"]
+    problems: List[str] = []
+    base_rows = {_row_key(r, spec.key): r for r in baseline.get("rows", [])}
+    new_rows = {_row_key(r, spec.key): r for r in result.get("rows", [])}
+    for key in sorted(set(base_rows) - set(new_rows), key=repr):
+        problems.append(f"{bench}: row {key} in baseline but missing from "
+                        f"results — coverage shrank")
+    for key in sorted(set(new_rows) - set(base_rows), key=repr):
+        problems.append(f"{bench}: new row {key} not in baseline — "
+                        f"refresh benchmarks/baselines/")
+    for key in sorted(set(base_rows) & set(new_rows), key=repr):
+        brow, nrow = base_rows[key], new_rows[key]
+        for path, (rtol, atol) in spec.metrics.items():
+            bvals = dict(_lookup(brow, path))
+            nvals = dict(_lookup(nrow, path))
+            for cpath in sorted(set(bvals) | set(nvals)):
+                b = bvals.get(cpath, KeyError)
+                n = nvals.get(cpath, KeyError)
+                if b is KeyError and n is KeyError:
+                    continue
+                if b is KeyError or n is KeyError:
+                    problems.append(f"{bench}: row {key} metric {cpath} "
+                                    f"present on only one side")
+                elif _drifted(b, n, rtol, atol):
+                    problems.append(
+                        f"{bench}: row {key} metric {cpath} drifted: "
+                        f"baseline {b!r} -> {n!r} "
+                        f"(rtol {rtol:g}, atol {atol:g})")
+    return problems
+
+
+def _bench_name(doc: dict, path: pathlib.Path) -> str:
+    name = doc.get("bench")
+    if not isinstance(name, str):
+        raise ValueError(f"{path}: not a bench document (no 'bench' key)")
+    return name
+
+
+def _validate(doc: dict, path: pathlib.Path) -> List[str]:
+    import benchmarks.schemas as schemas
+    fn = VALIDATORS.get(doc.get("bench"))
+    if fn is None:
+        return [f"{path}: no schema validator for bench "
+                f"{doc.get('bench')!r}"]
+    return [f"{path}: {e}" for e in getattr(schemas, fn)(doc)]
+
+
+def compare_files(result_path: pathlib.Path,
+                  baseline_path: pathlib.Path) -> List[str]:
+    result = json.loads(result_path.read_text())
+    baseline = json.loads(baseline_path.read_text())
+    bench = _bench_name(result, result_path)
+    if _bench_name(baseline, baseline_path) != bench:
+        return [f"bench mismatch: {result_path} is {bench!r}, "
+                f"{baseline_path} is {baseline.get('bench')!r}"]
+    problems = _validate(result, result_path) \
+        + _validate(baseline, baseline_path)
+    if problems:
+        return problems
+    return compare_docs(bench, result, baseline)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff bench results against committed baselines; "
+                    "exits nonzero on drift")
+    ap.add_argument("result", nargs="?", default=None,
+                    help="results json (default: pair every baseline "
+                         "with its results/ counterpart)")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="baseline json (required with an explicit "
+                         "result)")
+    ap.add_argument("--results-dir", default=str(RESULTS))
+    ap.add_argument("--baselines-dir", default=str(BASELINES))
+    args = ap.parse_args(argv)
+
+    pairs: List[Tuple[pathlib.Path, pathlib.Path]] = []
+    if args.result:
+        if not args.baseline:
+            ap.error("explicit result needs an explicit baseline")
+        pairs.append((pathlib.Path(args.result),
+                      pathlib.Path(args.baseline)))
+    else:
+        bdir = pathlib.Path(args.baselines_dir)
+        rdir = pathlib.Path(args.results_dir)
+        baselines = sorted(bdir.glob("*_bench.json"))
+        if not baselines:
+            print(f"compare: no baselines under {bdir}", file=sys.stderr)
+            return 2
+        pairs = [(rdir / p.name, p) for p in baselines]
+
+    problems: List[str] = []
+    for result_path, baseline_path in pairs:
+        if not result_path.exists():
+            problems.append(f"{result_path}: missing — run the bench "
+                            f"before comparing")
+            continue
+        if not baseline_path.exists():
+            problems.append(f"{baseline_path}: missing baseline")
+            continue
+        found = compare_files(result_path, baseline_path)
+        problems.extend(found)
+        status = "DRIFT" if found else "ok"
+        print(f"compare: {result_path.name} vs baseline -> {status}")
+    for p in problems:
+        print(f"  {p}", file=sys.stderr)
+    if problems:
+        print(f"compare: {len(problems)} problem(s); to accept an "
+              f"intentional change, copy the new results over "
+              f"benchmarks/baselines/", file=sys.stderr)
+        return 1
+    print("compare: all benches within tolerance of baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

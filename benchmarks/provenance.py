@@ -1,0 +1,55 @@
+"""Shared provenance header for every bench JSON under results/.
+
+Each document the bench runner writes carries a ``provenance`` object so
+a results file can always be traced back to the exact tree, seed and
+toolchain that produced it — without it, a committed artifact and the
+code drift apart silently (see benchmarks/schemas.py's module docstring
+for the incident that motivated schema validation in the first place).
+
+``provenance(seed=...)`` is cheap (one git subprocess, cached) and never
+raises: outside a git checkout the commit is recorded as "unknown".
+"""
+from __future__ import annotations
+
+import datetime
+import functools
+import platform as platform_mod
+import subprocess
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+PROVENANCE_VERSION = 1
+
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+@functools.lru_cache(maxsize=1)
+def git_commit() -> str:
+    """The current HEAD commit hash, or "unknown" outside a checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=_REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except Exception:
+        pass
+    return "unknown"
+
+
+def provenance(seed: Optional[int] = None) -> Dict[str, Any]:
+    """Build the provenance header stamped into every bench document."""
+    import jax
+    import jaxlib
+    return {
+        "version": PROVENANCE_VERSION,
+        "git_commit": git_commit(),
+        "seed": seed,
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform_mod.platform(),
+        "python": platform_mod.python_version(),
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+    }

@@ -1,179 +1,16 @@
-"""Analytical per-client resource model (paper's accounting, Appendix A.1).
+"""Analytic per-client resource model — re-export.
 
-FLOPs: forward FLOPs per single input sample (fvcore-style dense counts);
-backward = 2x forward of the *trainable* portion (2:1 ratio, refs [44-47]).
-Memory: parameters + optimizer moments of the trainable portion +
-activation footprint of layers that participate in backward (+ a single
-transient layer buffer for the frozen forward prefix).
-Communication: byte counts of the actual parameter pytrees sliced by the
-round plan (repro.federated.comm).
-
-All quantities are computed from the ViT config + MoCo v3 head dims, so
-Table 1/3 ratios and the Fig. 5/6 curves are structural predictions that we
-compare against the paper's measured values in EXPERIMENTS.md.
+The model itself lives in ``repro.roofline.client_costs`` (moved so the
+trace CLI and the resource observatory, which run with only ``src`` on
+the path, can price analytic columns next to measured ones); this module
+keeps the historical ``benchmarks.resources`` import surface working for
+the bench driver and tests. The analytic table is no longer a standalone
+script: ``python -m benchmarks.run --only resources`` runs it as a
+schema-validated bench suite (analytic vs measured columns,
+``results/resources_bench.json``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-
-import jax
-import numpy as np
-
-from repro.configs.base import FLConfig, SSLConfig, load_arch
-from repro.core import schedule as sched
-from repro.federated import comm
-from repro.models import lm as lm_mod
-from repro.models import vit as vit_mod
-
-BYTES_F32 = 4
-
-
-# ---------------------------------------------------------------------------
-# per-component forward FLOPs / activation floats (ViT + MoCo v3 heads)
-# ---------------------------------------------------------------------------
-@dataclass(frozen=True)
-class VitCosts:
-    tokens: int
-    d: int
-    d_ff: int
-    heads: int
-    layers: int
-    proj_hidden: int
-    proj_dim: int
-    pred_hidden: int
-
-    @property
-    def f_stem(self):
-        return 2 * self.tokens * 48 * self.d            # patch proj (4x4x3)
-
-    @property
-    def f_block(self):
-        t, d = self.tokens, self.d
-        attn = 2 * t * d * (3 * d) + 2 * t * t * d * 2 + 2 * t * d * d
-        mlp = 2 * t * d * self.d_ff * 2
-        return attn + mlp
-
-    @property
-    def f_proj(self):
-        return 2 * (self.d * self.proj_hidden
-                    + self.proj_hidden * self.proj_hidden
-                    + self.proj_hidden * self.proj_dim)
-
-    @property
-    def f_pred(self):
-        return 2 * (self.proj_dim * self.pred_hidden
-                    + self.pred_hidden * self.proj_dim)
-
-    @property
-    def a_block(self):
-        """Activation floats per sample per block (residuals, qkv, attn
-        matrices, mlp hidden) — what backward must keep."""
-        t, d = self.tokens, self.d
-        return t * d * (3 + 1 + 2 + 2) + 2 * self.heads * t * t \
-            + 2 * t * self.d_ff
-
-    @property
-    def a_stem(self):
-        return 2 * self.tokens * self.d
-
-    @property
-    def a_heads(self):
-        return 2 * (self.proj_hidden * 2 + self.proj_dim) \
-            + (self.pred_hidden + self.proj_dim)
-
-
-def vit_costs(cfg=None, ssl=None) -> VitCosts:
-    cfg = cfg or load_arch("vit-tiny")
-    ssl = ssl or SSLConfig()
-    return VitCosts(tokens=65, d=cfg.d_model, d_ff=cfg.d_ff,
-                    heads=cfg.num_heads, layers=cfg.num_layers,
-                    proj_hidden=ssl.proj_hidden, proj_dim=ssl.proj_dim,
-                    pred_hidden=ssl.pred_hidden)
-
-
-# ---------------------------------------------------------------------------
-# per-round client costs by schedule
-# ---------------------------------------------------------------------------
-def flops_per_sample_round(c: VitCosts, plan) -> float:
-    """MoCo v3 local step FLOPs for one sample in one round (2 views)."""
-    s, act = plan.sub_layers, plan.active_from
-    fwd_frozen = c.f_stem + act * c.f_block
-    fwd_active = (s - act) * c.f_block + c.f_proj + c.f_pred
-    online = 2 * (fwd_frozen + fwd_active)              # 2 views
-    target = 2 * (c.f_stem + s * c.f_block + c.f_proj)  # EMA branch, fwd only
-    bwd = 2 * 2 * fwd_active                            # 2:1 ratio, 2 views
-    if act > 0:
-        bwd += 2 * 2 * 0                                # frozen: no backward
-    total = online + target + bwd
-    if plan.align:
-        total += 2 * (c.f_stem + s * c.f_block)         # global model fwd
-    return total
-
-
-def memory_bytes(c: VitCosts, plan, batch: int,
-                 params_bytes_total: int) -> float:
-    """Peak local-training memory (paper Fig. 5a / Fig. 6b)."""
-    s, act = plan.sub_layers, plan.active_from
-    frac_params = (c.f_stem / c.f_block + s) / (c.f_stem / c.f_block
-                                                + c.layers)
-    p_bytes = params_bytes_total * frac_params
-    p_bytes *= 2                                        # online + target
-    opt_bytes = 2 * params_bytes_total * (s - act) / c.layers  # AdamW moments
-    acts = (c.a_stem + (s - act) * c.a_block + c.a_heads) * batch * BYTES_F32
-    acts += c.a_block * batch * BYTES_F32 * (1 if act > 0 else 0)  # transient
-    if plan.align:
-        acts += c.a_stem * batch * BYTES_F32            # global rep buffers
-    return p_bytes + opt_bytes + acts
-
-
-def build_ssl_param_tree(cfg=None, ssl=None):
-    """Abstract (eval_shape) online-state tree for comm accounting."""
-    from repro.core import heads as heads_mod
-    from repro.core import ssl as ssl_mod
-    cfg = cfg or load_arch("vit-tiny")
-    ssl = ssl or SSLConfig()
-    enc = ssl_mod.make_vit_encoder(cfg)
-    return jax.eval_shape(
-        lambda: ssl_mod.ssl_init(jax.random.PRNGKey(0), enc, ssl))
-
-
-def schedule_costs(schedule: str, *, rounds: int = 180, batch: int = 1024,
-                   local_epochs: int = 3, cfg=None, ssl=None,
-                   depth_dropout: float = 0.5,
-                   stage_allocation: str = "uniform"):
-    """Returns dict with total flops/sample, peak memory, comm bytes and
-    the per-round series — everything Table 1/3 + Fig. 5 need."""
-    cfg = cfg or load_arch("vit-tiny")
-    c = vit_costs(cfg, ssl)
-    fl = FLConfig(rounds=rounds, schedule=schedule,
-                  depth_dropout=depth_dropout,
-                  stage_allocation=stage_allocation)
-    plans = sched.build_schedule(fl, cfg.num_layers)
-    state = build_ssl_param_tree(cfg, ssl)
-    enc_tree = state["online"]["enc"]
-    params_bytes_total = comm.tree_bytes(enc_tree)
-
-    flops, mem, down, up = [], [], [], []
-    for p in plans:
-        f = flops_per_sample_round(c, p) * local_epochs
-        if p.depth_dropout > 0:
-            # frozen-prefix forward cost drops proportionally
-            s, act = p.sub_layers, p.active_from
-            saved = p.depth_dropout * act * c.f_block
-            f -= (2 + 2) * saved * local_epochs
-        flops.append(f)
-        mem.append(memory_bytes(c, p, batch, params_bytes_total))
-        cb = comm.round_comm_bytes(enc_tree, p, include_heads=False)
-        down.append(cb["download"])
-        up.append(cb["upload"])
-    return {
-        "schedule": schedule,
-        "flops_total": float(np.sum(flops)),
-        "peak_memory": float(np.max(mem)),
-        "download_total": int(np.sum(down)),
-        "upload_total": int(np.sum(up)),
-        "comm_total": int(np.sum(down) + np.sum(up)),
-        "series": {"flops": flops, "memory": mem, "download": down,
-                   "upload": up,
-                   "stage": [p.stage for p in plans]},
-    }
+from repro.roofline.client_costs import (  # noqa: F401
+    BYTES_F32, PAPER_MULT, SCHEDULE_NAMES, VitCosts, build_ssl_param_tree,
+    flops_per_sample_round, memory_bytes, schedule_costs, vit_costs)

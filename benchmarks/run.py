@@ -18,10 +18,17 @@
   privacy  DP-FedAvg + secure aggregation: utility delta, (eps, delta),
            wire/mask overhead and rounds/sec per schedule x codec x
            privacy mode (writes results/privacy_bench.json)
+  resources measured FLOPs/memory from the compiled XLA round programs
+           vs the analytic roofline vs the paper's Table 3 multipliers,
+           per engine x schedule (writes results/resources_bench.json)
 
 ``python -m benchmarks.run`` runs the fast set (``--only`` takes a
 comma-separated subset); ``--full`` adds the reduced-scale FL accuracy
-benchmarks (table4), which train for real.
+benchmarks (table4), which train for real. Every written document
+carries the shared provenance header (``benchmarks.provenance``) and is
+validated against ``benchmarks.schemas`` before it hits disk;
+``benchmarks.compare`` diffs results against the committed baselines
+under ``benchmarks/baselines/``.
 """
 from __future__ import annotations
 
@@ -36,6 +43,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 import numpy as np                                        # noqa: E402
 
 from benchmarks import resources                          # noqa: E402
+from benchmarks.provenance import provenance              # noqa: E402
 from repro.obs import NOOP_OBS                            # noqa: E402
 
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
@@ -45,15 +53,12 @@ RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results"
 # tree (docs/observability.md).
 OBS = NOOP_OBS
 
-SCHEDULES = ("e2e", "layerwise", "lw_fedssl", "progressive", "fll_dd")
-NAMES = {"e2e": "FedMoCo", "layerwise": "FedMoCo-LW",
-         "lw_fedssl": "LW-FedSSL", "progressive": "Prog-FedSSL",
-         "fll_dd": "FLL+DD"}
-# paper Table 3 cost columns (memory, flops, comm) for validation
-PAPER_MULT = {"e2e": (1.00, 1.00, 1.00), "layerwise": (0.25, 0.35, 0.08),
-              "lw_fedssl": (0.30, 0.48, 0.31),
-              "progressive": (1.00, 0.57, 0.54),
-              "fll_dd": (0.62, 0.36, 0.08)}
+# schedule names / paper Table 3 cost multipliers — single definitions
+# in repro.core.schedule and repro.roofline.client_costs
+from repro.core.schedule import SCHEDULES                 # noqa: E402
+
+NAMES = resources.SCHEDULE_NAMES
+PAPER_MULT = resources.PAPER_MULT
 
 
 def bench_table1():
@@ -386,7 +391,8 @@ def bench_transport(reps=5, codec_reps=3):
                       "codec_reps": codec_reps, "codecs": list(codecs),
                       "engines": ["xla", "pallas"],
                       "schedules": list(SCHEDULES)},
-           "rows": rows, "codec_rows": codec_rows}
+           "rows": rows, "codec_rows": codec_rows,
+           "provenance": provenance()}
     errors = validate_transport_bench(doc)
     assert not errors, errors
     RESULTS.mkdir(exist_ok=True)
@@ -484,7 +490,7 @@ def bench_simulation(rounds=6, clients=6, clients_per_round=4,
                       "seed": seed, "schedules": list(schedules),
                       "fleets": list(fleets), "policies": list(policies),
                       "engine": "sequential"},
-           "rows": rows}
+           "rows": rows, "provenance": provenance(seed=seed)}
     errors = validate_simulation_bench(doc)
     assert not errors, errors
     if write:
@@ -583,7 +589,7 @@ def bench_privacy(rounds=4, clients=4, schedules=("e2e", "lw_fedssl"),
                       "modes": [m for m, _ in modes],
                       "dp_clip": 1.0, "dp_noise_multiplier": 1.1,
                       "dp_delta": 1e-5, "engine": "sequential"},
-           "rows": rows}
+           "rows": rows, "provenance": provenance(seed=seed)}
     errors = validate_privacy_bench(doc)
     assert not errors, errors
     if write:
@@ -593,6 +599,49 @@ def bench_privacy(rounds=4, clients=4, schedules=("e2e", "lw_fedssl"),
         print("BENCH " + json.dumps({"bench": "privacy",
                                      "rows": len(rows)}))
         print(f"(schema-validated; json -> {out})")
+    return doc
+
+
+def bench_resources(engines=("sequential", "vmap"), measure_rounds=20,
+                    compile_memory=True, seed=0, write=True):
+    """Measured resources: XLA cost/memory analysis vs the analytic
+    roofline, per engine x schedule.
+
+    This is the old standalone analytic table folded into a bench suite:
+    each row carries the analytic columns (``repro.roofline.client_costs``)
+    next to the *measured* ones — FLOPs from ``Lowered.cost_analysis()``
+    on the unrolled round programs, peak/argument/output memory from the
+    compiled rolled program of each schedule's peak stage, and full-scale
+    comm from the abstract transport walk (which reproduces the paper's
+    0.08 / 0.31 / 0.54 comm column exactly). Writes
+    results/resources_bench.json (validated against benchmarks.schemas,
+    whose validator also enforces the measured-vs-analytic tolerances)
+    and emits one BENCH json line. Tests call this with smaller knobs and
+    ``write=False``; CI's regression job diffs the written document
+    against benchmarks/baselines/ via benchmarks.compare.
+    """
+    print("\n== Resources: measured (XLA) vs analytic vs paper ==")
+    from benchmarks.schemas import validate_resources_bench
+    from repro.launch.trace import paper_table, print_paper_table
+
+    table = paper_table(engines=tuple(engines),
+                        measure_rounds=measure_rounds,
+                        compile_memory=compile_memory,
+                        log=print)
+    print_paper_table(table)
+    rows = table.pop("rows")
+    doc = {"bench": "resources", "config": table, "rows": rows,
+           "provenance": provenance(seed=seed)}
+    errors = validate_resources_bench(doc)
+    assert not errors, errors
+    if write:
+        RESULTS.mkdir(exist_ok=True)
+        out = RESULTS / "resources_bench.json"
+        out.write_text(json.dumps(doc, indent=1))
+        print("BENCH " + json.dumps({"bench": "resources",
+                                     "rows": len(rows)}))
+        print(f"(schema-validated incl. measured-vs-analytic tolerances; "
+              f"json -> {out})")
     return doc
 
 
@@ -635,6 +684,7 @@ BENCHES = {
     "kernels": bench_kernels, "roofline": bench_roofline,
     "engine": bench_engine, "transport": bench_transport,
     "simulation": bench_simulation, "privacy": bench_privacy,
+    "resources": bench_resources,
 }
 FULL_BENCHES = {"table4": bench_table4}
 

@@ -8,16 +8,24 @@ definition here. The validators return a list of human-readable problems
 (empty = valid) instead of raising, so callers can report every issue at
 once.
 
-Five document families are covered: the fleet-simulation bench
+Document families covered: the fleet-simulation bench
 (``validate_simulation_bench``), the wire-transport bench
 (``validate_transport_bench`` — per-schedule pack/unpack throughput for
 both wire engines plus one codec-throughput row per codec), the privacy
 bench (``validate_privacy_bench`` — DP/secure-agg utility and overhead
-per schedule x codec x mode), and the two
-observability exports from ``repro.obs`` — the JSONL span stream
-(``validate_trace_jsonl``) and the Chrome ``trace_event`` document
-(``validate_chrome_trace``) that Perfetto / chrome://tracing loads —
-plus the flattened metrics CSV (``validate_metrics_csv``).
+per schedule x codec x mode), the measured-resources bench
+(``validate_resources_bench`` — XLA cost/memory analysis vs the analytic
+roofline per engine x schedule), the health report the driver exports
+(``validate_health_report``), and the two observability exports from
+``repro.obs`` — the JSONL span stream (``validate_trace_jsonl``) and the
+Chrome ``trace_event`` document (``validate_chrome_trace``) that
+Perfetto / chrome://tracing loads — plus the flattened metrics CSV
+(``validate_metrics_csv``).
+
+Every bench document additionally carries the shared provenance header
+from ``benchmarks.provenance`` (git commit, seed, jax/jaxlib versions,
+platform, timestamp) so results files stay comparable across PRs;
+``_check_provenance`` enforces it in each bench validator.
 """
 from __future__ import annotations
 
@@ -41,7 +49,31 @@ SIMULATION_ROW_SCHEMA: Dict[str, Any] = {
     "dropped_client_rounds": int,
 }
 
-SIMULATION_TOP_KEYS = ("bench", "config", "rows")
+SIMULATION_TOP_KEYS = ("bench", "config", "rows", "provenance")
+
+# the shared header benchmarks.provenance stamps on every bench doc
+PROVENANCE_SCHEMA: Dict[str, Any] = {
+    "version": int,
+    "git_commit": str,
+    "seed": (int, type(None)),
+    "jax": str,
+    "jaxlib": str,
+    "backend": str,
+    "platform": str,
+    "python": str,
+    "timestamp": str,
+}
+
+
+def _check_provenance(doc: Any, errors: List[str]):
+    if not isinstance(doc, dict):
+        return
+    prov = doc.get("provenance")
+    if prov is None:
+        errors.append("provenance: missing (stamp with "
+                      "benchmarks.provenance.provenance())")
+        return
+    _check_fields("provenance", prov, PROVENANCE_SCHEMA, errors)
 
 # optional per-row extras: newer bench runs embed the versioned
 # ``FLHistory.to_dict()`` round-trip form; older checked-in artifacts
@@ -91,6 +123,7 @@ def validate_simulation_bench(doc: Any) -> List[str]:
     if doc.get("bench") != "simulation":
         errors.append(f"bench: expected 'simulation', "
                       f"got {doc.get('bench')!r}")
+    _check_provenance(doc, errors)
     rows = doc.get("rows", [])
     if not isinstance(rows, list) or not rows:
         errors.append("rows: expected a non-empty list")
@@ -125,7 +158,8 @@ TRANSPORT_CODEC_ROW_SCHEMA: Dict[str, Any] = {
     "decode_gbps": dict,
 }
 
-TRANSPORT_TOP_KEYS = ("bench", "config", "rows", "codec_rows")
+TRANSPORT_TOP_KEYS = ("bench", "config", "rows", "codec_rows",
+                      "provenance")
 
 
 def _check_engine_map(where: str, v: Any, errors: List[str]):
@@ -176,6 +210,7 @@ def validate_transport_bench(doc: Any) -> List[str]:
     if doc.get("bench") != "transport":
         errors.append(f"bench: expected 'transport', "
                       f"got {doc.get('bench')!r}")
+    _check_provenance(doc, errors)
     rows = doc.get("rows", [])
     if not isinstance(rows, list) or not rows:
         errors.append("rows: expected a non-empty list")
@@ -229,7 +264,7 @@ PRIVACY_ROW_SCHEMA: Dict[str, Any] = {
     "slowdown": float,
 }
 
-PRIVACY_TOP_KEYS = ("bench", "config", "rows")
+PRIVACY_TOP_KEYS = ("bench", "config", "rows", "provenance")
 
 
 def validate_privacy_bench(doc: Any) -> List[str]:
@@ -243,6 +278,7 @@ def validate_privacy_bench(doc: Any) -> List[str]:
     if doc.get("bench") != "privacy":
         errors.append(f"bench: expected 'privacy', "
                       f"got {doc.get('bench')!r}")
+    _check_provenance(doc, errors)
     rows = doc.get("rows", [])
     if not isinstance(rows, list) or not rows:
         errors.append("rows: expected a non-empty list")
@@ -257,6 +293,173 @@ def validate_privacy_bench(doc: Any) -> List[str]:
             if row.get("dp") is False and row.get("epsilon") is not None:
                 errors.append(f"rows[{i}].epsilon: must be null when "
                               f"dp=false")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# measured-resources bench
+# ---------------------------------------------------------------------------
+# one row per engine x schedule, the measure_schedule/paper_table shape:
+# measured FLOPs + peak memory from the compiled XLA round programs
+# (``peak_memory``/``argument_bytes``/... are None on flops-only runs),
+# analytic predictions at the same config, full-scale comm, and
+# reduction multipliers against the engine's own e2e row.
+_NUM_OR_NONE = (int, float, type(None))
+
+RESOURCES_ROW_SCHEMA: Dict[str, Any] = {
+    "engine": str,
+    "schedule": str,
+    "num_layers": int,
+    "batch_size": int,
+    "rounds": int,
+    "local_epochs": int,
+    "clients": int,
+    "stages": list,
+    "flops_total": (int, float),
+    "analytic_flops_total": (int, float),
+    "analytic_peak_memory": (int, float),
+    "program_peak_analytic": (int, float),
+    "peak_memory": _NUM_OR_NONE,
+    "argument_bytes": _NUM_OR_NONE,
+    "output_bytes": _NUM_OR_NONE,
+    "temp_bytes": _NUM_OR_NONE,
+    "comm_bytes": int,
+    "comm_ratio": float,
+    "analytic_flops_ratio": float,
+    "analytic_memory_ratio": float,
+    "flops_ratio": float,
+    "memory_ratio": (float, type(None)),
+}
+
+RESOURCES_STAGE_SCHEMA: Dict[str, Any] = {
+    "sub_layers": int,
+    "active_from": int,
+    "align": bool,
+    "depth_dropout": float,
+    "rounds": int,
+    "flops_per_sample": (int, float),
+    "analytic_flops_per_sample": (int, float),
+    "analytic_memory_bytes": (int, float),
+}
+
+RESOURCES_TOP_KEYS = ("bench", "config", "rows", "provenance")
+
+
+def validate_resources_bench(doc: Any) -> List[str]:
+    """Validate a measured-resources bench document; returns a list of
+    problems. Beyond shape, the measured-vs-analytic tolerances from the
+    document's own config are enforced — a results file whose measured
+    FLOPs drifted outside ``flops_rtol`` of the analytic roofline is
+    invalid, not merely different."""
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"top level: expected object, got {type(doc).__name__}"]
+    for k in RESOURCES_TOP_KEYS:
+        if k not in doc:
+            errors.append(f"top level: missing key '{k}'")
+    if doc.get("bench") != "resources":
+        errors.append(f"bench: expected 'resources', "
+                      f"got {doc.get('bench')!r}")
+    _check_provenance(doc, errors)
+    cfg = doc.get("config", {})
+    tol = cfg.get("tolerances", {}) if isinstance(cfg, dict) else {}
+    flops_rtol = tol.get("flops_rtol")
+    memory_factor = tol.get("memory_factor")
+    rows = doc.get("rows", [])
+    if not isinstance(rows, list) or not rows:
+        errors.append("rows: expected a non-empty list")
+        return errors
+    for i, row in enumerate(rows):
+        _check_fields(f"rows[{i}]", row, RESOURCES_ROW_SCHEMA, errors)
+        if not isinstance(row, dict):
+            continue
+        for j, st in enumerate(row.get("stages") or []):
+            _check_fields(f"rows[{i}].stages[{j}]", st,
+                          RESOURCES_STAGE_SCHEMA, errors)
+        meas, an = row.get("flops_total"), row.get("analytic_flops_total")
+        if isinstance(flops_rtol, float) and isinstance(meas, (int, float)) \
+                and isinstance(an, (int, float)) and an > 0:
+            if abs(meas / an - 1.0) > flops_rtol:
+                errors.append(
+                    f"rows[{i}].flops_total: measured/analytic "
+                    f"{meas / an:.3f} outside +-{flops_rtol:.0%}")
+        peak = row.get("peak_memory")
+        pan = row.get("program_peak_analytic")
+        if isinstance(memory_factor, float) \
+                and isinstance(peak, (int, float)) \
+                and isinstance(pan, (int, float)) and pan > 0:
+            ratio = peak / pan
+            if ratio > memory_factor or ratio < 1.0 / memory_factor:
+                errors.append(
+                    f"rows[{i}].peak_memory: measured/analytic "
+                    f"{ratio:.3f} outside [1/{memory_factor:g}, "
+                    f"{memory_factor:g}]")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# health report (repro.obs.health exporter)
+# ---------------------------------------------------------------------------
+from repro.obs.health import (ALERT_KINDS, ALERT_LEVELS,  # noqa: E402
+                              HEALTH_VERSION)
+
+HEALTH_ALERT_SCHEMA: Dict[str, Any] = {
+    "round": int,
+    "kind": str,
+    "level": str,
+    "value": (int, float, type(None)),
+    "message": str,
+}
+
+HEALTH_TOP_KEYS = ("version", "rounds_observed", "fatal", "halted",
+                   "counts", "alerts", "config")
+
+
+def validate_health_report(doc: Any) -> List[str]:
+    """Validate a ``health.json`` document as written by
+    ``repro.obs.health.write_health_json``; returns a list of problems."""
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"top level: expected object, got {type(doc).__name__}"]
+    for k in HEALTH_TOP_KEYS:
+        if k not in doc:
+            errors.append(f"top level: missing key '{k}'")
+    if doc.get("version") != HEALTH_VERSION:
+        errors.append(f"version: expected {HEALTH_VERSION}, "
+                      f"got {doc.get('version')!r}")
+    counts = doc.get("counts", {})
+    if isinstance(counts, dict):
+        for kind in ALERT_KINDS:
+            if not isinstance(counts.get(kind), int) \
+                    or isinstance(counts.get(kind), bool):
+                errors.append(f"counts.{kind}: expected int, "
+                              f"got {counts.get(kind)!r}")
+        for kind in counts:
+            if kind not in ALERT_KINDS:
+                errors.append(f"counts: unknown alert kind {kind!r}")
+    else:
+        errors.append("counts: expected object")
+    alerts = doc.get("alerts", [])
+    if not isinstance(alerts, list):
+        errors.append("alerts: expected list")
+        alerts = []
+    for i, a in enumerate(alerts):
+        _check_fields(f"alerts[{i}]", a, HEALTH_ALERT_SCHEMA, errors)
+        if isinstance(a, dict):
+            if a.get("kind") not in ALERT_KINDS:
+                errors.append(f"alerts[{i}].kind: unknown {a.get('kind')!r}")
+            if a.get("level") not in ALERT_LEVELS:
+                errors.append(f"alerts[{i}].level: expected one of "
+                              f"{ALERT_LEVELS}, got {a.get('level')!r}")
+    if isinstance(counts, dict) and isinstance(doc.get("alerts"), list) \
+            and all(isinstance(a, dict) for a in alerts):
+        for kind in ALERT_KINDS:
+            n = sum(1 for a in alerts if a.get("kind") == kind)
+            if counts.get(kind) not in (None, n):
+                errors.append(f"counts.{kind}: {counts[kind]} does not "
+                              f"match {n} alert(s) of that kind")
+    if doc.get("halted") is True and doc.get("fatal") is False:
+        errors.append("halted: cannot be true without a fatal alert")
     return errors
 
 

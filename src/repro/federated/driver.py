@@ -58,6 +58,7 @@ from repro.federated import aggregate, comm, server
 from repro.federated import engine as engine_mod
 from repro.federated import transport as transport_mod
 from repro.obs import NOOP_OBS, format_round_line
+from repro.obs import resources as obs_resources
 from repro.privacy import PrivacyEngine, make_privacy
 from repro.optim import make_optimizer
 from repro.optim.schedules import learning_rate, scaled_base_lr
@@ -258,6 +259,14 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                     state = server.begin_stage(
                         state, plan.stage,
                         weight_transfer=fl.weight_transfer)
+                    if obs.measure_resources:
+                        # measured cost attribution for the stage's round
+                        # program (AOT lowering only — never compiles, so
+                        # the jit.recompiles counter stays untouched)
+                        with tracer.span("resources.measure", cat="obs",
+                                         stage=plan.stage):
+                            round_span.set(**obs_resources.stage_cost_attrs(
+                                eng, plan))
                 lr = float(learning_rate(
                     plan.round_idx, fl.rounds, base_lr,
                     train_cfg.lr_schedule,
@@ -419,12 +428,17 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                     wire_upload_bytes=up["wire_bytes"],
                     participants=len(participants),
                     dropped=len(outcome.dropped) if outcome else 0)
+                if obs.enabled:
+                    # live watermark (mem.* attrs are excluded from
+                    # Tracer.structure(): environment, not structure)
+                    round_span.set(**obs_resources.memory_span_attrs())
                 if prv is not None:
                     round_span.set(
                         epsilon=eps,
                         clip_fraction=hist.clip_fraction[-1],
                         secure_agg_overhead_bytes=hist
                         .secure_agg_overhead_bytes[-1])
+            round_recompiles = 0
             if obs.enabled:
                 met.counter("fl.rounds").inc()
                 met.counter("comm.download_bytes").inc(cb["download"])
@@ -449,7 +463,8 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                 entries = (eng.compile_cache_size()
                            + wire.compile_cache_size())
                 if entries > jit_entries:
-                    met.counter("jit.recompiles").inc(entries - jit_entries)
+                    round_recompiles = entries - jit_entries
+                    met.counter("jit.recompiles").inc(round_recompiles)
                     jit_entries = entries
                 met.gauge("jit.cache_entries").set(jit_entries)
             if log:
@@ -459,6 +474,32 @@ def run_fedssl(model_cfg, ssl_cfg, fl, train_cfg, *, images, client_indices,
                     up_mb=cb["upload"] / 1e6,
                     wire_mb=(down["wire_bytes"] + up["wire_bytes"]) / 1e6,
                     extra=sim_log))
+            if obs.health is not None:
+                ratio = ((cb["download"] + cb["upload"])
+                         / max(1, down["wire_bytes"] + up["wire_bytes"]))
+                for alert in obs.health.observe_round(
+                        plan.round_idx, loss=hist.loss[-1],
+                        compression_ratio=ratio,
+                        dropped=len(outcome.dropped) if outcome else 0,
+                        participants=len(participants),
+                        recompiles=round_recompiles,
+                        new_stage=plan.new_stage):
+                    tracer.instant(
+                        "health." + alert.kind, cat="health",
+                        level=alert.level, round=plan.round_idx,
+                        value=(float(alert.value)
+                               if np.isfinite(alert.value) else None),
+                        message=alert.message)
+                    if log:
+                        log(f"health[{alert.level}] round "
+                            f"{plan.round_idx}: {alert.message}")
+                if obs.health.should_halt:
+                    tracer.instant("health.halt", cat="health",
+                                   round=plan.round_idx)
+                    if log:
+                        log(f"health: fatal alert; halting after round "
+                            f"{plan.round_idx + 1}/{fl.rounds}")
+                    break
             if (prv is not None and prv.cfg.epsilon_budget > 0.0
                     and eps > prv.cfg.epsilon_budget):
                 tracer.instant("privacy.budget_exhausted", cat="fl",

@@ -59,6 +59,19 @@ def _pool_len(pool) -> int:
     return jax.tree.leaves(pool)[0].shape[0]
 
 
+def _abstract_round_inputs(encoder, ssl_cfg, opt, images, batch_size):
+    """Shape-only (eval_shape) state/opt/batch trees for AOT lowering —
+    no parameters are materialized."""
+    from repro.core import ssl as ssl_mod
+    state = jax.eval_shape(
+        lambda k: ssl_mod.ssl_init(k, encoder, ssl_cfg),
+        jax.random.PRNGKey(0))
+    opt_state = jax.eval_shape(opt.init, state["online"])
+    img = jax.ShapeDtypeStruct((batch_size,) + tuple(images.shape[1:]),
+                               images.dtype)
+    return state, opt_state, img
+
+
 def jit_cache_entries(fns) -> int:
     """Total compiled-specialization count across ``fns`` — jit'd
     callables expose ``_cache_size()``; plain host functions (the pallas
@@ -176,6 +189,23 @@ class SequentialEngine:
                 align=plan.align, depth_dropout=plan.depth_dropout)
         return self._steps[sig]
 
+    def lower_round(self, plan, *, clients: int = 1):
+        """AOT-lower this engine's compiled unit for ``plan`` with
+        abstract inputs: the jit'd per-batch local step (``clients`` is
+        accepted for signature parity with the vmap engine and ignored —
+        the sequential unit is per-client by construction). The resource
+        observatory reads ``cost_analysis``/``memory_analysis`` off the
+        result; one program run = one local step over one batch, so
+        per-sample FLOPs = flops / batch_size."""
+        state, opt_state, img = _abstract_round_inputs(
+            self.encoder, self.ssl_cfg, self.opt, self.images,
+            self.train_cfg.batch_size)
+        return self._step(plan).lower(
+            state, opt_state, img,
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            state["online"]["enc"] if plan.align else None)
+
     def run_round(self, state, plan, participants, client_keys, lr,
                   global_enc, server_online, collect=False):
         tracer = self.obs.tracer
@@ -281,6 +311,37 @@ class VmapEngine:
                     outs, bc["server"], bc["state"]["online"], res),
                 fedavg=fedavg)
         return self._programs[sig]
+
+    def lower_round(self, plan, *, clients: int = 1):
+        """AOT-lower the full jit'd round program for ``plan`` with
+        abstract inputs: ``clients`` stacked participants at scan trip
+        count 1 (XLA's cost analysis counts a rolled loop body once, so
+        trip count 1 makes the count exact — one local step per client,
+        plus the in-program wire path and FedAvg). Per-sample FLOPs =
+        flops / (clients * batch_size)."""
+        state, opt_state, img = _abstract_round_inputs(
+            self.encoder, self.ssl_cfg, self.opt, self._pool,
+            self.train_cfg.batch_size)
+        spec = self.transport.plan_specs(state["online"], plan)["upload"]
+        C, T, B = clients, 1, self.train_cfg.batch_size
+        n_max = self._pad_idx.shape[1]
+        residuals = jax.eval_shape(
+            lambda: self.transport.gather_residuals(list(range(C)), spec))
+        broadcast = {"state": state,
+                     "global_enc": (state["online"]["enc"]
+                                    if plan.align else None),
+                     "server": state["online"]}
+        shards = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct((C, n_max) + tuple(a.shape[1:]),
+                                           a.dtype), self._pool)
+        return self._program(plan, spec).lower(
+            broadcast, shards,
+            jax.ShapeDtypeStruct((C, T, B), jnp.int32),
+            jax.ShapeDtypeStruct((C, T, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((C, T), jnp.bool_),
+            jax.ShapeDtypeStruct((C,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            residuals)
 
     def run_round(self, state, plan, participants, client_keys, lr,
                   global_enc, server_online, collect=False):

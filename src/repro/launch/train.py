@@ -74,9 +74,14 @@ def privacy_from_args(args):
 
 
 def obs_from_args(args, mode):
-    """Observability bundle from --trace/--metrics/--profile-dir."""
+    """Observability bundle from --trace/--metrics/--profile-dir plus the
+    health monitor (--health/--halt-on-unhealthy) and the measured
+    per-stage cost attribution (--measure-resources)."""
     return make_obs(trace=args.trace, metrics=args.metrics,
                     profile_dir=args.profile_dir or None,
+                    health=args.health,
+                    halt_on_unhealthy=args.halt_on_unhealthy,
+                    measure_resources=args.measure_resources,
                     mode=mode, schedule=args.schedule, engine=args.engine,
                     codec=args.codec, seed=args.seed)
 
@@ -90,6 +95,8 @@ def export_obs(obs, args, hist=None):
         trace_jsonl=out / "run_trace.jsonl" if args.trace else None,
         chrome_trace=out / "run_trace.chrome.json" if args.trace else None,
         metrics_csv=out / "run_metrics.csv" if args.metrics else None,
+        health_json=(out / "health.json" if obs.health is not None
+                     else None),
         schedule=args.schedule, engine=args.engine, codec=args.codec)
     if args.metrics and hist is not None:
         written["history_json"] = write_history_json(
@@ -373,6 +380,24 @@ def train_lm(args):
                 wire_mb=(down["wire_bytes"] + up["wire_bytes"]) / 1e6,
                 extra=f" eps {eps:.3g}" if prv is not None
                 and prv.dp else ""))
+            if obs.health is not None:
+                for alert in obs.health.observe_round(
+                        plan.round_idx, loss=hist[-1],
+                        compression_ratio=(cb["download"] + cb["upload"])
+                        / max(1, down["wire_bytes"] + up["wire_bytes"]),
+                        participants=fl.num_clients,
+                        new_stage=plan.new_stage):
+                    tracer.instant("health." + alert.kind, cat="health",
+                                   level=alert.level, round=plan.round_idx,
+                                   message=alert.message)
+                    log(f"health[{alert.level}] round {plan.round_idx}: "
+                        f"{alert.message}")
+                if obs.health.should_halt:
+                    tracer.instant("health.halt", cat="health",
+                                   round=plan.round_idx)
+                    log(f"health: fatal alert; halting after round "
+                        f"{plan.round_idx + 1}/{fl.rounds}")
+                    break
             if (prv is not None and prv.cfg.epsilon_budget > 0.0
                     and eps > prv.cfg.epsilon_budget):
                 log(f"privacy budget exhausted: eps {eps:.4g} > "
@@ -491,6 +516,21 @@ def main():
                     help="record typed counters/gauges/histograms and "
                          "write run_metrics.csv + run_history.json under "
                          "--obs-dir")
+    ap.add_argument("--health", action="store_true",
+                    help="attach the streaming health monitor (NaN/inf "
+                         "loss, z-score loss spikes, compression-ratio "
+                         "and straggler drop-rate drift, jit-recompile "
+                         "storms) and write a schema-validated "
+                         "health.json under --obs-dir "
+                         "(docs/observability.md)")
+    ap.add_argument("--halt-on-unhealthy", action="store_true",
+                    help="stop training on a fatal health alert "
+                         "(implies --health)")
+    ap.add_argument("--measure-resources", action="store_true",
+                    help="AOT-lower each new stage's round program and "
+                         "attach measured cost_analysis attributes "
+                         "(res.*) to the stage-opening round span; a few "
+                         "seconds per stage")
     ap.add_argument("--profile-dir", default="",
                     help="also capture a jax.profiler (XLA-level) trace "
                          "into this directory; spans are host-level")

@@ -24,6 +24,8 @@ from repro.obs.export import (ConsoleRenderer, chrome_trace_doc,
                               read_jsonl, trace_header, write_chrome_trace,
                               write_history_json, write_jsonl,
                               write_metrics_csv)
+from repro.obs.health import (HEALTH_VERSION, Alert, HealthMonitor,
+                              write_health_json)
 from repro.obs.metrics import NOOP_METRICS, MetricsRegistry
 from repro.obs.trace import NOOP_TRACER, NoopTracer, Span, Tracer, is_tracing
 
@@ -32,6 +34,7 @@ __all__ = [
     "ConsoleRenderer", "chrome_trace_doc", "format_round_line",
     "metrics_csv_text", "read_jsonl", "trace_header", "write_chrome_trace",
     "write_history_json", "write_jsonl", "write_metrics_csv",
+    "HEALTH_VERSION", "Alert", "HealthMonitor", "write_health_json",
     "NOOP_METRICS", "MetricsRegistry",
     "NOOP_TRACER", "NoopTracer", "Span", "Tracer", "is_tracing",
 ]

@@ -24,17 +24,24 @@ class Observability:
     """Tracer + metrics + profiler hooks. Prefer ``make_obs``."""
 
     def __init__(self, tracer=NOOP_TRACER, metrics=NOOP_METRICS,
-                 profile_dir: Optional[str] = None):
+                 profile_dir: Optional[str] = None, health=None,
+                 measure_resources: bool = False):
         self.tracer = tracer
         self.metrics = metrics
         self.profile_dir = profile_dir
+        self.health = health
+        # opt-in: the driver AOT-lowers each new stage's round program
+        # and attaches measured cost_analysis attrs (res.*) to the
+        # stage-opening round span — a few seconds per stage
+        self.measure_resources = measure_resources
         self._profiling = False
 
     @property
     def enabled(self) -> bool:
         return (is_tracing(self.tracer)
                 or isinstance(self.metrics, MetricsRegistry)
-                or self.profile_dir is not None)
+                or self.profile_dir is not None
+                or self.health is not None)
 
     # -- jax.profiler hooks (gated: failure to start is non-fatal) ----------
     def start_profiler(self):
@@ -59,7 +66,7 @@ class Observability:
 
     # -- artifact export -----------------------------------------------------
     def export(self, *, trace_jsonl=None, chrome_trace=None,
-               metrics_csv=None, **meta):
+               metrics_csv=None, health_json=None, **meta):
         """Write the requested artifacts; returns {kind: path}."""
         written = {}
         if trace_jsonl and is_tracing(self.tracer):
@@ -71,6 +78,10 @@ class Observability:
         if metrics_csv and isinstance(self.metrics, MetricsRegistry):
             written["metrics_csv"] = export_mod.write_metrics_csv(
                 self.metrics, metrics_csv)
+        if health_json and self.health is not None:
+            from repro.obs.health import write_health_json
+            write_health_json(health_json, self.health, **meta)
+            written["health_json"] = health_json
         return written
 
 
@@ -79,14 +90,23 @@ NOOP_OBS = Observability()
 
 def make_obs(*, trace: bool = False, metrics: bool = False,
              profile_dir: Optional[str] = None, clock=None,
+             health: bool = False, halt_on_unhealthy: bool = False,
+             measure_resources: bool = False,
              **meta) -> Observability:
-    """Build an enabled bundle; extra kwargs become trace run metadata."""
+    """Build an enabled bundle; extra kwargs become trace run metadata.
+    ``health=True`` attaches a ``HealthMonitor`` the driver feeds each
+    round; ``halt_on_unhealthy`` arms its halt-on-fatal hook."""
     if trace:
         tracer = Tracer(clock) if clock is not None else Tracer()
         tracer.meta.update(meta)
     else:
         tracer = NOOP_TRACER
+    monitor = None
+    if health or halt_on_unhealthy:
+        from repro.obs.health import HealthMonitor
+        monitor = HealthMonitor(halt_on_fatal=halt_on_unhealthy)
     return Observability(
         tracer=tracer,
         metrics=MetricsRegistry() if metrics else NOOP_METRICS,
-        profile_dir=profile_dir)
+        profile_dir=profile_dir, health=monitor,
+        measure_resources=measure_resources)

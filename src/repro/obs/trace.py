@@ -130,9 +130,14 @@ class Tracer:
 
     def structure(self):
         """The timestamp-free view the determinism tests compare: one
-        ``(seq, parent, depth, name, cat, tid, args)`` tuple per event."""
+        ``(seq, parent, depth, name, cat, tid, args)`` tuple per event.
+        ``mem.``-prefixed args (the live device-memory watermarks the
+        driver attaches to round spans) are environment noise, not
+        structure, and are dropped here."""
         return [(e["seq"], e["parent"], e["depth"], e["name"], e["cat"],
-                 e["tid"], tuple(sorted(e["args"].items())))
+                 e["tid"], tuple(sorted(
+                     (k, v) for k, v in e["args"].items()
+                     if not k.startswith("mem."))))
                 for e in self.events]
 
 

@@ -167,16 +167,22 @@ class RooflineResult:
         }
 
 
-def analyze_compiled(compiled, *, arch, shape, mode, mesh_name, n_devices,
-                     cfg, shape_cfg, cost_scale: float = 1.0
-                     ) -> RooflineResult:
-    """cost_scale corrects for rolled loops XLA counts once (the gradient-
-    accumulation scan: body = one full fwd+bwd, trip count = microbatch)."""
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):      # older jax returns [dict]
+def cost_dict(stage) -> dict:
+    """``cost_analysis()`` of a ``Lowered`` or ``Compiled`` stage as one
+    flat dict (older jax returns ``[dict]``)."""
+    cost = stage.cost_analysis()
+    if isinstance(cost, list):
         cost = cost[0]
+    return dict(cost or {})
+
+
+def memory_dict(compiled) -> dict:
+    """``memory_analysis()`` of a ``Compiled`` as argument/output/temp/
+    peak bytes. ``peak_memory_in_bytes`` is backend-dependent (absent or
+    None on CPU) — the fallback is the buffer-assignment sum, which upper-
+    bounds the live set the same way the analytic model does."""
     mem = compiled.memory_analysis()
-    mem_d = {
+    return {
         "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
         "output_bytes": getattr(mem, "output_size_in_bytes", 0),
         "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
@@ -185,6 +191,15 @@ def analyze_compiled(compiled, *, arch, shape, mode, mesh_name, n_devices,
             + getattr(mem, "output_size_in_bytes", 0)
             + getattr(mem, "temp_size_in_bytes", 0)),
     }
+
+
+def analyze_compiled(compiled, *, arch, shape, mode, mesh_name, n_devices,
+                     cfg, shape_cfg, cost_scale: float = 1.0
+                     ) -> RooflineResult:
+    """cost_scale corrects for rolled loops XLA counts once (the gradient-
+    accumulation scan: body = one full fwd+bwd, trip count = microbatch)."""
+    cost = cost_dict(compiled)
+    mem_d = memory_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     from repro.models import scan_cfg
     extra = 0.0
